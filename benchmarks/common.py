@@ -1,0 +1,36 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.core.policies import make_policy
+from repro.core.simkernel import SimConfig, simulate
+from repro.core.traces import make_workload
+
+N_CORES = 12
+DUR = 30.0  # seconds of simulated time per run (fast mode)
+
+
+def run_sim(kind: str, n_fns: int, policy: str, *, duration=DUR, seed=1,
+            depth=2.0, burst_us=120.0, window=1000, static_rt=None,
+            exec_s=0.1):
+    wl = make_workload(kind, n_fns, duration_s=duration, n_cores=N_CORES,
+                       seed=seed, exec_s=exec_s)
+    pol = make_policy(policy, credit_window=window) if policy != "lags-static" \
+        else make_policy(policy, static_rt_fns=static_rt)
+    cfg = SimConfig(n_cores=N_CORES, hierarchy_depth=depth, burst_us=burst_us)
+    return simulate(wl, pol, cfg)
+
+
+@contextmanager
+def timed(rows: list, name: str, derived: str = ""):
+    t0 = time.time()
+    yield
+    rows.append((name, (time.time() - t0) * 1e6, derived))
+
+
+def emit(rows):
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,40 @@
+"""Fig 11: cgroup-aware task completion vs tuned baselines.
+
+120 functions of identical work under resctl / resctl-parallel / resctl-mix,
+comparing CFS, tuned CFS (100 ms slice), SCHED_RR, EEVDF, tuned EEVDF and
+CFS-LAGS, plus the 12-function uncontended reference.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_sim
+
+POLICIES = ("cfs", "cfs-tuned", "rr", "eevdf", "eevdf-tuned", "lags")
+KINDS = ("resctl", "resctl-parallel", "resctl-mix")
+
+
+def main() -> list:
+    rows = []
+    for kind in KINDS:
+        t0 = time.time()
+        base = run_sim(kind, 12, "cfs")
+        rows.append((
+            f"fig11.{kind}.12fn-cfs",
+            (time.time() - t0) * 1e6,
+            f"p50={base.pct(50):.3f};p95={base.pct(95):.3f}",
+        ))
+        for pol in POLICIES:
+            t0 = time.time()
+            r = run_sim(kind, 120, pol)
+            rows.append((
+                f"fig11.{kind}.120fn-{pol}",
+                (time.time() - t0) * 1e6,
+                f"p50={r.pct(50):.3f};p95={r.pct(95):.3f};"
+                f"thr_slo={r.throughput_slo():.1f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

@@ -1,0 +1,44 @@
+"""Fig 3: impact of workload colocation on throughput and scheduling overhead.
+
+(a) throughput@1s vs density; (b) overhead % of CPU; (c) mean switch cost.
+``--cluster-mode`` reproduces §3.2 (Knative node: depth-5 hierarchy, 100
+pods, longer bursts -> ~20 % overhead at ~48 us/switch).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import DUR, N_CORES, emit, run_sim
+
+
+def main(cluster_mode: bool = False, densities=(3, 9, 13, 19)) -> list:
+    rows = []
+    if cluster_mode:
+        t0 = time.time()
+        r = run_sim("azure2021", 100, "cfs", depth=5.0, burst_us=280.0, exec_s=0.2)
+        rows.append((
+            "fig3.cluster_mode.cfs",
+            (time.time() - t0) * 1e6,
+            f"ovh={r.overhead_frac*100:.1f}%;switch_us={r.mean_switch_cost_us:.1f}",
+        ))
+        return rows
+    for kind in ("azure2021", "resctl"):
+        for d in densities:
+            t0 = time.time()
+            r = run_sim(kind, d * N_CORES, "cfs")
+            rows.append((
+                f"fig3.{kind}.d{d}",
+                (time.time() - t0) * 1e6,
+                (
+                    f"thr_slo={r.throughput_slo():.1f}rps;"
+                    f"ovh={r.overhead_frac*100:.1f}%;"
+                    f"switch_us={r.mean_switch_cost_us:.1f};"
+                    f"sw_per_s={r.switches/DUR:.0f}"
+                ),
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main(cluster_mode="--cluster-mode" in sys.argv))

@@ -1,0 +1,46 @@
+"""Fig 7 / §5.1: cluster consolidation — CFS vs CFS-LAGS minimum node count.
+
+Paper: 14 nodes (CFS, static reservation) -> 10 nodes (LAGS), a 28 %
+reduction; safe utilisation 45 % -> 55 %; perceived-vs-effective CPU gap
++100 % (CFS) -> +10 % (LAGS).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.cluster import consolidation_sweep, min_nodes_meeting_slo
+
+
+def main() -> list:
+    rows = []
+    t0 = time.time()
+    res = consolidation_sweep(total_fns=800,
+                              node_counts=(15, 14, 13, 12, 11, 10, 9, 8))
+    us = (time.time() - t0) * 1e6
+    for r in res:
+        rows.append((
+            f"fig7.{r.policy}.n{r.n_nodes}",
+            us / len(res),
+            (
+                f"p50={r.p50:.3f};p95={r.p95:.3f};"
+                f"util_eff={r.util_effective*100:.0f}%;"
+                f"util_perc={r.util_perceived*100:.0f}%;"
+                f"ovh={r.overhead_frac*100:.1f}%"
+            ),
+        ))
+    n_cfs = min_nodes_meeting_slo(res, "cfs")
+    n_lags = min_nodes_meeting_slo(res, "lags")
+    rows.append((
+        "fig7.consolidation",
+        0.0,
+        (
+            f"min_nodes_cfs={n_cfs};min_nodes_lags={n_lags};"
+            f"reduction={100*(1-n_lags/max(n_cfs,1)):.0f}%"
+        ),
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(main())

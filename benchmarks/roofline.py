@@ -1,0 +1,72 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
+
+Three terms per cell (EXPERIMENTS.md §Roofline):
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs            (197 Tf bf16)
+  memory_s     = HBM_bytes_per_device / HBM_bw                (819 GB/s)
+  collective_s = wire_bytes_per_device / (links * link_bw)    (~50 GB/s/link)
+
+Caveat handled here: XLA's ``cost_analysis`` counts a while-loop body ONCE —
+scan-over-layers / microbatch / loss-chunk loops must be re-multiplied by
+their trip counts.  ``hlo_stats.analyze_hlo`` parses the partitioned HLO,
+builds the computation call graph, extracts each while loop's trip count
+from its condition, and attributes per-computation FLOPs (dot/conv fusions
+are NOT re-derivable from text, so FLOPs use the analytic per-arch model in
+``flops_model``; bytes and collective wire volumes are parsed from the HLO
+with trip multipliers).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); the ratio
+MODEL_FLOPS / HLO_FLOPs shows how much compiled compute is useful
+(catching remat recompute + MoE dispatch overhead).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks.flops_model import cell_flops, model_flops
+from benchmarks.hlo_stats import CHIP, roofline_terms
+
+
+def main(report_path: str = "dryrun_report.json") -> list:
+    rows = []
+    try:
+        cells = json.load(open(report_path))
+    except FileNotFoundError:
+        print(f"# {report_path} missing - run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --out "
+              "dryrun_report.json", file=sys.stderr)
+        return [("roofline.skipped", 0.0, "no dryrun_report.json")]
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        t0 = time.time()
+        terms = roofline_terms(c)
+        hlo_f = cell_flops(c["arch"], c["shape"])
+        mf = model_flops(c["arch"], c["shape"])
+        n_dev = 512 if c["mesh"] == "2x16x16" else 256
+        comp_s = hlo_f / n_dev / CHIP.peak_flops
+        dom = max(
+            ("compute", comp_s),
+            ("memory", terms["memory_s"]),
+            ("collective", terms["collective_s"]),
+            key=lambda kv: kv[1],
+        )[0]
+        rows.append((
+            f"roofline.{c['arch']}.{c['shape']}.{c['mesh']}",
+            (time.time() - t0) * 1e6,
+            (
+                f"compute_s={comp_s:.4f};memory_s={terms['memory_s']:.4f};"
+                f"collective_s={terms['collective_s']:.4f};dominant={dom};"
+                f"model_flops={mf:.3e};hlo_flops={hlo_f:.3e};"
+                f"useful={mf/max(hlo_f,1e-9)*100:.0f}%"
+            ),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_report.json"))

@@ -1,0 +1,22 @@
+"""Paper §5.1: consolidate a serverless cluster with CFS-LAGS nodes.
+
+  PYTHONPATH=src python examples/cluster_consolidation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.cluster import consolidation_sweep, min_nodes_meeting_slo
+
+res = consolidation_sweep(total_fns=800, node_counts=(14, 12, 10, 9),
+                          duration_s=20.0)
+for r in res:
+    print(
+        f"{r.policy:4s} nodes={r.n_nodes:2d}  p95={r.p95:7.3f}s  "
+        f"util={r.util_effective*100:4.0f}%eff/{r.util_perceived*100:4.0f}%perc"
+        f"  overhead={r.overhead_frac*100:4.1f}%"
+    )
+n_cfs = min_nodes_meeting_slo(res, "cfs")
+n_lags = min_nodes_meeting_slo(res, "lags")
+print(f"min nodes: CFS={n_cfs}  LAGS={n_lags} "
+      f"({100*(1-n_lags/max(n_cfs,1)):.0f}% reduction)")

@@ -1,0 +1,28 @@
+"""Serve a small model with batched multi-tenant requests, comparing the
+paper's LAGS admission against fair round-robin (DESIGN.md §2).
+
+  PYTHONPATH=src python examples/serve_multitenant.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.launch.serve import build_workload
+from repro.serving.engine import Engine, EngineConfig
+
+DURATION = 40.0
+
+for policy in ("fair", "lags"):
+    tenants, arrivals = build_workload(48, DURATION, seed=3)
+    eng = Engine(EngineConfig(policy=policy, max_resident=12), tenants)
+    st = eng.run(DURATION, arrivals)
+    lat = np.asarray([r.latency for r in st.completed])
+    print(
+        f"{policy:5s}: completed={len(st.completed):4d} "
+        f"p50={np.median(lat):5.2f}s slo@2s={np.mean(lat < 2)*100:3.0f}% "
+        f"switch_overhead={st.overhead_frac*100:4.1f}%"
+    )
+print("LAGS should show lower p50 / higher SLO attainment at similar or "
+      "lower switch overhead.")

@@ -1,0 +1,122 @@
+"""Sort-based expert-parallel MoE dispatch via all_to_all (shard_map).
+
+The production alternative to the GShard dense-dispatch einsums in
+``repro.models.moe`` (EXPERIMENTS.md §Perf "dx"): tokens stay local to their
+data shard, are bucketed by destination expert shard with a fixed per-peer
+capacity, exchanged with a single ``lax.all_to_all`` over the "model" axis,
+FFN'd by the local experts, and returned by the inverse exchange.  Wire
+bytes are 2 * tokens * d_model * 2 B * capacity_factor — token payloads, not
+one-hot products (napkin: qwen2-moe train ~8 GB/step vs ~500 GB for the
+dense-dispatch gradient reductions).
+
+This module provides the building blocks + a single-shard reference used by
+tests; wiring it as ``ModelConfig.moe_impl="ep_a2a"`` across the stack is
+the follow-on perf iteration (§Perf log).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_by_peer(x, expert_ids, gate_w, n_peers: int, capacity: int):
+    """Pack tokens into fixed-capacity per-peer send buffers.
+
+    x: (T, M); expert_ids/gate_w: (T, K) global expert ids and gate weights;
+    experts are owned block-wise: peer p owns experts [p*E/P, (p+1)*E/P).
+
+    Returns (send_x (P, C, M), send_meta (P, C, 3) [src_slot, local_expert,
+    gate*2^?? -> gate as float in meta_w], counts (P,)).  Overflow beyond
+    ``capacity`` is dropped (capacity-factor semantics, as in the dense path).
+    """
+    T, K = expert_ids.shape
+    E_per_peer = None  # implied by caller's id mapping
+    flat_ids = expert_ids.reshape(-1)  # (T*K,)
+    flat_gate = gate_w.reshape(-1)
+    flat_src = jnp.repeat(jnp.arange(T), K)
+    peer = flat_ids // jnp.maximum(1, (jnp.max(flat_ids) + 1) // n_peers)
+    # stable sort by peer
+    order = jnp.argsort(peer * (T * K) + jnp.arange(T * K))
+    peer_s = peer[order]
+    # position within peer bucket
+    onehot = jax.nn.one_hot(peer_s, n_peers, dtype=jnp.int32)  # (TK, P)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.sum(pos * onehot, axis=1)  # (TK,)
+    keep = slot < capacity
+    dest = peer_s * capacity + jnp.where(keep, slot, capacity - 1)
+
+    send_x = jnp.zeros((n_peers * capacity, x.shape[1]), x.dtype)
+    send_x = send_x.at[dest].add(
+        jnp.where(keep[:, None], x[flat_src[order]], 0)
+    )
+    meta_src = jnp.full((n_peers * capacity,), -1, jnp.int32).at[dest].set(
+        jnp.where(keep, flat_src[order], -1)
+    )
+    meta_eid = jnp.zeros((n_peers * capacity,), jnp.int32).at[dest].set(
+        jnp.where(keep, flat_ids[order], 0)
+    )
+    meta_gate = jnp.zeros((n_peers * capacity,)).at[dest].set(
+        jnp.where(keep, flat_gate[order], 0.0)
+    )
+    counts = jnp.sum(onehot * keep[:, None], axis=0)
+    return (
+        send_x.reshape(n_peers, capacity, x.shape[1]),
+        meta_src.reshape(n_peers, capacity),
+        meta_eid.reshape(n_peers, capacity),
+        meta_gate.reshape(n_peers, capacity),
+        counts,
+    )
+
+
+def expert_ffn(xs, eids_local, w_gate, w_up, w_down):
+    """Apply the owning shard's experts.  xs: (N, M); eids_local: (N,)
+    local expert index; w_*: (E_local, M, F) / (E_local, F, M)."""
+    wg = w_gate[eids_local]  # (N, M, F)
+    wu = w_up[eids_local]
+    wd = w_down[eids_local]
+    g = jnp.einsum("nm,nmf->nf", xs, wg)
+    u = jnp.einsum("nm,nmf->nf", xs, wu)
+    return jnp.einsum("nf,nfm->nm", jax.nn.silu(g) * u, wd)
+
+
+def moe_ep_a2a_local(x, expert_ids, gate_w, w_gate, w_up, w_down,
+                     axis_name: str | None = None,
+                     capacity_factor: float = 1.25):
+    """One data-shard's MoE via bucketed exchange.
+
+    When ``axis_name`` is set (inside shard_map over the "model" axis), the
+    buffers cross shards via lax.all_to_all; with ``axis_name=None`` this is
+    the single-shard reference (peers = 1), numerically identical to the
+    capacity-limited dense path and used as the test oracle.
+    """
+    T, M = x.shape
+    K = expert_ids.shape[1]
+    n_peers = (
+        jax.lax.psum(1, axis_name) if axis_name is not None else 1
+    )
+    capacity = max(1, int(T * K * capacity_factor / max(n_peers, 1)))
+    send_x, m_src, m_eid, m_gate, _ = bucket_by_peer(
+        x, expert_ids, gate_w, n_peers, capacity
+    )
+    if axis_name is not None:
+        recv_x = jax.lax.all_to_all(send_x, axis_name, 0, 0, tiled=False)
+        recv_eid = jax.lax.all_to_all(m_eid, axis_name, 0, 0, tiled=False)
+    else:
+        recv_x, recv_eid = send_x, m_eid
+    E_local = w_gate.shape[0]
+    flat_x = recv_x.reshape(-1, M)
+    local_eid = recv_eid.reshape(-1) % E_local
+    out = expert_ffn(flat_x, local_eid, w_gate, w_up, w_down)
+    out = out.reshape(recv_x.shape)
+    if axis_name is not None:
+        out = jax.lax.all_to_all(out, axis_name, 0, 0, tiled=False)
+    # combine back to source slots with gate weights
+    y = jnp.zeros((T, M), x.dtype)
+    flat_out = out.reshape(-1, M)
+    flat_src = m_src.reshape(-1)
+    flat_gate = m_gate.reshape(-1)
+    ok = flat_src >= 0
+    y = y.at[jnp.where(ok, flat_src, 0)].add(
+        jnp.where(ok[:, None], flat_out * flat_gate[:, None], 0.0)
+    )
+    return y

@@ -1,0 +1,95 @@
+"""Fault tolerance & elasticity control plane (host-level logic).
+
+On a real cluster these hooks run in the launcher process per host; here the
+logic is pure and unit-tested with virtual hosts:
+
+  * ``HealthTracker`` — heartbeat bookkeeping, failure detection by timeout;
+  * ``plan_remesh`` — given surviving hosts, pick the largest valid
+    (pod, data, model) mesh <= survivors and the checkpoint-resume plan
+    (elastic rescale via ``checkpoint.restore(..., sharding_tree)``);
+  * ``StragglerWatchdog`` — step-time EWMA; flags hosts slower than
+    ``k`` sigma for hot-spare replacement (straggler mitigation);
+  * preemption-safe training is provided by atomic checkpoints
+    (``repro.train.checkpoint``) + deterministic data (``repro.train.data``):
+    restart = restore(latest) and continue at the stored step.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class HealthTracker:
+    n_hosts: int
+    timeout_s: float = 60.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def heartbeat(self, host: int, now: Optional[float] = None):
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def failed_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [
+            h
+            for h in range(self.n_hosts)
+            if now - self.last_seen.get(h, -1e18) > self.timeout_s
+        ]
+
+    def healthy_hosts(self, now: Optional[float] = None) -> List[int]:
+        bad = set(self.failed_hosts(now))
+        return [h for h in range(self.n_hosts) if h not in bad]
+
+
+def plan_remesh(
+    n_healthy_chips: int,
+    model_parallel: int = 16,
+    prefer_pods: int = 2,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (pod, data, model) mesh fitting the surviving chips.
+
+    Model parallelism is preserved (weights shard layout unchanged); data
+    parallelism shrinks — batch is re-spread and optimizer state re-sharded
+    from the checkpoint.  Examples: 512 chips -> (2,16,16); lose a host of
+    8 chips -> 504 chips -> (1,31,16) = 496 used.
+    """
+    if n_healthy_chips < model_parallel:
+        raise ValueError("fewer chips than model-parallel degree")
+    groups = n_healthy_chips // model_parallel
+    for pods in range(min(prefer_pods, groups), 0, -1):
+        if groups % pods == 0:
+            data = groups // pods
+            if pods > 1:
+                return (pods, data, model_parallel), ("pod", "data", "model")
+            return (data, model_parallel), ("data", "model")
+    return (groups, model_parallel), ("data", "model")
+
+
+@dataclass
+class StragglerWatchdog:
+    """Flags hosts whose step time exceeds mean + k*sigma (EWMA)."""
+
+    n_hosts: int
+    alpha: float = 0.1
+    k_sigma: float = 3.0
+    warmup: int = 8
+    mean: Dict[int, float] = field(default_factory=dict)
+    var: Dict[int, float] = field(default_factory=dict)
+    count: Dict[int, int] = field(default_factory=dict)
+
+    def observe(self, host: int, step_s: float) -> bool:
+        """Record a step time; returns True if host is now a straggler."""
+        m = self.mean.get(host, step_s)
+        v = self.var.get(host, 0.0)
+        self.count[host] = self.count.get(host, 0) + 1
+        is_straggler = False
+        if self.count[host] > self.warmup:
+            sigma = max(v, 1e-12) ** 0.5
+            fleet_mean = sum(self.mean.values()) / max(len(self.mean), 1)
+            if step_s > fleet_mean + self.k_sigma * max(sigma, 0.05 * fleet_mean):
+                is_straggler = True
+        d = step_s - m
+        self.mean[host] = m + self.alpha * d
+        self.var[host] = (1 - self.alpha) * (v + self.alpha * d * d)
+        return is_straggler

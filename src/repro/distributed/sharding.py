@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (MaxText-style) and helpers.
+
+Every parameter and strategic activation carries *logical* axis names
+("batch", "heads", "embed", "experts", ...).  A rule table maps logical names
+to physical mesh axes; :func:`to_pspec` resolves them, dropping physical axes
+that are absent from the active mesh (so the same model code runs on a single
+CPU device, a 16x16 pod, or a 2x16x16 multi-pod mesh).
+
+Two rule presets are provided: ``TRAIN_RULES`` (FSDP over "data" + TP over
+"model") and ``DECODE_RULES`` (adds KV-sequence parallelism over "model" for
+long-context decode).  The hillclimbing variants in EXPERIMENTS.md §Perf swap
+individual rules, not model code.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axis (or tuple of axes)
+TRAIN_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",  # Megatron-style sequence parallelism on the residual
+    "kv_seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qk_features": "model",  # fused head*dim projections
+    "embed": None,  # activation embed dim replicated
+    "mlp": "model",
+    "experts": "model",
+    # falls back to "model" when the expert count is not mesh-divisible
+    # (e.g. qwen2-moe's 60 experts): the used-axis tracking in to_pspec
+    # gives "experts" first claim on the axis when divisible.
+    "expert_mlp": "model",
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "dt_rank": None,
+    # parameter-only axes (FSDP dimension)
+    "embed_p": "data",
+    "capacity": None,
+}
+
+# Long-context decode: batch is tiny, KV length is huge -> shard KV sequence;
+# a single new token cannot be sequence-parallel.  Serving holds no optimizer
+# state, so weights are NOT FSDP-sharded over "data" (replicating them kills
+# the per-step all-gathers that dominated the baseline decode roofline —
+# EXPERIMENTS.md §Perf H1); expert FFN dims shard over "data" instead so MoE
+# giants still fit (qwen3-moe: 1.8 GB/chip expert weights, token-sized
+# routing comm instead of 57 GB/step weight gathers).
+DECODE_RULES = dict(
+    TRAIN_RULES,
+    kv_seq="model",
+    seq_sp=None,
+    batch=("pod", "data"),
+    embed_p=None,
+    expert_mlp="data",
+)
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: dict = TRAIN_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules if rules is not None else TRAIN_RULES
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def to_pspec(
+    logical,
+    rules: Optional[dict] = None,
+    mesh: Optional[Mesh] = None,
+    shape: Optional[tuple] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for the active mesh.
+
+    Shape-aware: a mapping is dropped when the dimension is not divisible by
+    the product of the mapped mesh axis sizes (pjit in_shardings require
+    exact divisibility), and when a mesh axis was already consumed by an
+    earlier dimension (PartitionSpecs may use each axis once).
+    """
+    rules = rules if rules is not None else _CTX.rules
+    mesh = mesh if mesh is not None else _CTX.mesh
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        phys = rules.get(name, None)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        if mesh_axes is not None:
+            phys = tuple(a for a in phys if a in mesh_axes and a not in used)
+        if shape is not None and phys:
+            # greedily keep the longest prefix that divides the dimension
+            while phys:
+                prod = 1
+                for a in phys:
+                    prod *= sizes.get(a, 1)
+                if shape[i] % prod == 0:
+                    break
+                phys = phys[:-1]
+        if not phys:
+            out.append(None)
+            continue
+        used.update(phys)
+        out.append(phys[0] if len(phys) == 1 else tuple(phys))
+    return P(*out)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = to_pspec(logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical, mesh: Optional[Mesh] = None, rules=None):
+    mesh = mesh if mesh is not None else _CTX.mesh
+    assert mesh is not None
+    return NamedSharding(mesh, to_pspec(logical, rules=rules, mesh=mesh))

@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (forward) with causal / sliding-window masks.
+
+Grid: (B*H, n_q_blocks, n_kv_blocks); the KV dimension is the innermost
+(sequential on TPU), carrying the online-softmax state (m, l, acc) in VMEM
+scratch.  Block shapes are MXU-aligned (multiples of 128 on the contraction
+and lane dims; q/k blocks default 128x128).  VMEM working set per step:
+q (bq, D) + k,v (bk, D) + acc (bq, D) + scores (bq, bk) — about 260 KB at
+bq=bk=128, D=128 in fp32, well inside the ~16 MB VMEM budget, leaving room
+for double buffering.
+
+Sliding-window blocks whose entire (q_block, kv_block) tile is masked are
+still visited (grid is static); the mask zeroes their contribution.  The
+ops.py wrapper skips fully-masked KV tails by shrinking the grid when a
+window is set.
+
+Validated in interpret mode against ``ref.flash_attention_ref`` over shape
+and dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, scale, causal, window, bq, bk, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    bq=128, bk=128, interpret=False):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    scale = float(scale if scale is not None else 1.0 / (D ** 0.5))
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q, n_kv = S // bq, S // bk
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

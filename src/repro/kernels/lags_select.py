@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the LAGS scheduler hot path (``pick_next_task``).
+
+One scheduler tick over T tenant cgroups: PELT + Load Credit EMA updates
+(elementwise, VPU) followed by selection of the k lowest-credit runnable
+tenants — the vectorised analogue of the kernel's pick_next_task_fair walk,
+serving the engine's admission scheduler at thousands-of-tenants scale.
+
+Single-block kernel: the credit state for T <= 65536 tenants is ~1 MB and
+fits VMEM whole, so selection is k iterations of masked argmin over a VMEM
+vector (no HBM round-trips).  T is padded to a lane multiple (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.load_credit import DEFAULT_EMA_WINDOW, PELT_HALFLIFE_TICKS
+
+SUB = 8  # sublane tile for (SUB, T/...) layout; row 0 carries data
+INF = float("inf")
+
+
+def _lags_kernel(load_ref, credit_ref, frac_ref, runnable_ref,
+                 newload_ref, newcredit_ref, idx_ref,
+                 *, k, pelt_y, alpha, T):
+    load = load_ref[...]
+    credit = credit_ref[...]
+    frac = frac_ref[...]
+    runnable = runnable_ref[...]
+
+    new_load = pelt_y * load + (1.0 - pelt_y) * frac
+    new_credit = (1.0 - alpha) * credit + alpha * new_load
+    newload_ref[...] = new_load
+    newcredit_ref[...] = new_credit
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, new_credit.shape, 1)
+    valid = (runnable > 0.5) & (lane < T)
+    # stable tie-break by index
+    key0 = jnp.where(valid, new_credit + lane.astype(jnp.float32) * 1e-12, INF)
+
+    def pick(i, key):
+        m = jnp.min(key)
+        # first index attaining the min
+        is_min = key == m
+        idx = jnp.min(jnp.where(is_min, lane, T + 1))
+        idx_ref[0, i] = jnp.where(jnp.isfinite(m), idx, -1)
+        return jnp.where(lane == idx, INF, key)
+
+    jax.lax.fori_loop(0, k, pick, key0)
+
+
+def lags_select(load_avg, credit, running_frac, runnable, k,
+                *, window=DEFAULT_EMA_WINDOW,
+                halflife=PELT_HALFLIFE_TICKS, interpret=False):
+    """Vectorised scheduler tick.  All inputs (T,) float32/bool.
+
+    Returns (new_load (T,), new_credit (T,), picked_idx (k,) int32 with -1
+    padding when fewer than k tenants are runnable).
+    """
+    T = load_avg.shape[0]
+    Tp = -(-T // 128) * 128
+    pad = lambda x: jnp.pad(x.astype(jnp.float32), (0, Tp - T))[None, :]
+    pelt_y = float(0.5 ** (1.0 / halflife))
+    alpha = float(2.0 / (window + 1.0))
+
+    kernel = functools.partial(
+        _lags_kernel, k=k, pelt_y=pelt_y, alpha=alpha, T=T
+    )
+    nl, nc, idx = pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec((1, Tp), lambda: (0, 0)),
+            pl.BlockSpec((1, Tp), lambda: (0, 0)),
+            pl.BlockSpec((1, Tp), lambda: (0, 0)),
+            pl.BlockSpec((1, Tp), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Tp), lambda: (0, 0)),
+            pl.BlockSpec((1, Tp), lambda: (0, 0)),
+            pl.BlockSpec((1, k), lambda: (0, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Tp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Tp), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        pad(load_avg),
+        pad(credit),
+        pad(running_frac),
+        pad(runnable.astype(jnp.float32)),
+    )
+    return nl[0, :T], nc[0, :T], idx[0]

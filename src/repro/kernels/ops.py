@@ -1,0 +1,51 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU —
+the same call sites work in both environments.  The model stack selects
+these via ``use_pallas``; the XLA paths in ``repro.models`` remain the
+dry-run/compile path (Pallas does not lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lags_select as _lags
+from repro.kernels import ssm_scan as _ssm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+        interpret=_default_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k, v, kv_len, *, bk=512):
+    return _dec.decode_attention(
+        q, k, v, kv_len, bk=bk, interpret=_default_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bi"))
+def ssm_scan(dA, dBx, C, h0, *, chunk=64, bi=512):
+    return _ssm.ssm_scan(
+        dA, dBx, C, h0, chunk=chunk, bi=bi, interpret=_default_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "window"))
+def lags_select(load_avg, credit, running_frac, runnable, k, *, window=1000):
+    return _lags.lags_select(
+        load_avg, credit, running_frac, runnable, k, window=window,
+        interpret=_default_interpret(),
+    )

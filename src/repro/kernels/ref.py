@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D).  window=0 means global."""
+    B, H, S, D = q.shape
+    scale = scale or (1.0 / jnp.sqrt(D).astype(jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale=None):
+    """q: (B, H, D); k,v: (B, H, L, D); kv_len: (B,) valid prefix length."""
+    B, H, L, D = k.shape
+    scale = scale or (1.0 / jnp.sqrt(D).astype(jnp.float32))
+    s = jnp.einsum("bhd,bhld->bhl", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.arange(L)[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhl,bhld->bhd", p.astype(v.dtype), v)
+
+
+def ssm_scan_ref(dA, dBx, C, h0):
+    """Selective-scan: h_t = dA_t * h_{t-1} + dBx_t; y_t = h_t . C_t.
+
+    dA, dBx: (B, S, I, N); C: (B, S, N); h0: (B, I, N).
+    Returns (y (B, S, I), h_last (B, I, N)).
+    """
+
+    def step(h, xs):
+        a, bx, c = xs
+        h = a * h + bx
+        return h, jnp.einsum("bin,bn->bi", h, c)
+
+    xs = (
+        dA.transpose(1, 0, 2, 3),
+        dBx.transpose(1, 0, 2, 3),
+        C.transpose(1, 0, 2),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_last
+
+
+def lags_select_ref(load_avg, credit, running_frac, runnable, k,
+                    *, pelt_y=0.5 ** (1 / 8), window=1000):
+    """One scheduler tick over T cgroups: PELT + Load Credit EMA update, then
+    pick the k runnable groups with the LOWEST updated credit.
+
+    Returns (new_load, new_credit, picked_idx (k,), picked_mask (T,)).
+    Ties broken by index (stable).  This is pick_next_task_fair vectorised.
+    """
+    alpha = 2.0 / (window + 1.0)
+    new_load = pelt_y * load_avg + (1 - pelt_y) * running_frac
+    new_credit = (1 - alpha) * credit + alpha * new_load
+    key = jnp.where(runnable, new_credit, jnp.inf)
+    # stable tie-break by index
+    T = key.shape[0]
+    key2 = key + jnp.arange(T, dtype=key.dtype) * 1e-12
+    neg, idx = jax.lax.top_k(-key2, k)
+    picked_valid = jnp.isfinite(-neg)
+    picked_idx = jnp.where(picked_valid, idx, -1)
+    mask = jnp.zeros(T, bool).at[jnp.where(picked_valid, idx, 0)].set(
+        picked_valid
+    )
+    return new_load, new_credit, picked_idx, mask

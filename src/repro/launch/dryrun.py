@@ -1,0 +1,165 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module must fit
+per-device memory, and the collective schedule is extracted for the roofline
+analysis (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_report.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, list_configs
+from repro.distributed.sharding import sharding_ctx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_lowerable, cell_skip_reason
+
+from repro.launch.hlo_analysis import collective_stats_attributed as collective_stats
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "step": shape.step,
+    }
+    if skip:
+        cell["status"] = "skipped"
+        cell["reason"] = skip
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    low = build_lowerable(cfg, shape, mesh)
+
+    def to_ns(tree):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return jax.tree_util.tree_map(
+            lambda ps: NamedSharding(mesh, ps),
+            tree,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+
+    with mesh:
+        with sharding_ctx(mesh, low.rules):
+            jitted = jax.jit(
+                low.fn,
+                in_shardings=to_ns(low.in_shardings),
+                out_shardings=to_ns(low.out_shardings),
+                donate_argnums=low.donate_argnums,
+            )
+            lowered = jitted.lower(*low.args_sds)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    cell.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collectives=coll,
+        memory={
+            k: int(getattr(mem, k, 0) or 0)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+        },
+    )
+    if verbose:
+        print(f"--- {arch} x {shape_name} x {mesh_name} ---")
+        print("memory_analysis:", cell["memory"])
+        print(
+            f"cost_analysis: flops={cell['flops']:.3e} "
+            f"bytes={cell['bytes_accessed']:.3e}"
+        )
+        print(
+            "collectives: "
+            + ", ".join(
+                f"{k}:{v['count']}({v['bytes']/1e6:.1f}MB)"
+                for k, v in coll.items()
+                if isinstance(v, dict) and v["count"]
+            )
+            + f" | total {coll['total_bytes']/1e6:.1f} MB/device"
+        )
+        print(f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every cell, both meshes")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON report")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        combos = [
+            (a, s, mp)
+            for a in list_configs()
+            for s in SHAPES
+            for mp in ((False,) if args.single_pod_only else (False, True))
+        ]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    failed = 0
+    for arch, shape, mp in combos:
+        try:
+            cells.append(run_cell(arch, shape, mp))
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failed += 1
+            cells.append(
+                {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if mp else "16x16",
+                 "status": "FAILED", "error": repr(e)[:500]}
+            )
+            print(f"FAILED {arch} x {shape} x {'multi' if mp else 'single'}: {e!r}",
+                  file=sys.stderr)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(cells, f, indent=1)
+        print(f"wrote {args.out} ({len(cells)} cells, {failed} failed)")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input — no device allocation — plus the matching PartitionSpec
+trees and the step function to lower.  This is the single source of truth
+used by the dry-run, the roofline benchmarks and the launch scripts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_skip_reason
+from repro.distributed import sharding as sh
+from repro.models import model as model_lib
+from repro.models.params import spec_to_pspecs, spec_to_sds
+from repro.train import train_loop
+
+# Room for the new token past the cached prefix; 16 keeps the cache length
+# divisible by the "model" mesh axis so KV-sequence sharding applies.
+DECODE_PAD = 16
+
+# Baseline microbatch (gradient-accumulation) factors for train_4k: standard
+# production configs for the archs whose global-batch-256 activations exceed
+# HBM on a v5e (16 GB) chip.  EXPERIMENTS.md §Dry-run records the footprints.
+TRAIN_ACCUM = {
+    "jamba-v0.1-52b": 16,
+    "gemma3-27b": 8,
+    "falcon-mamba-7b": 8,
+    "qwen2-moe-a2.7b": 8,
+    "qwen3-moe-235b-a22b": 8,
+    "qwen2-vl-7b": 2,
+}
+
+
+@dataclass
+class Lowerable:
+    """Everything needed to jit().lower() one (arch x shape) cell."""
+
+    fn: Callable
+    args_sds: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    rules: dict
+    donate_argnums: tuple = ()
+
+
+def _batch_sds(cfg: ModelConfig, shape: ShapeConfig, step: str, rules, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    dt = jnp.dtype(cfg.dtype)
+    def bp(sds, *names):
+        return sh.to_pspec(names, rules=rules, mesh=mesh, shape=sds.shape)
+
+    if step == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        ps = {"tokens": bp(batch["tokens"], "batch", None)}
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = jax.ShapeDtypeStruct((B, 1, 3), i32)
+            ps["positions"] = bp(batch["positions"], "batch", None, None)
+        return batch, ps
+    if cfg.frontend == "audio_frames":
+        batch = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)}
+        ps = {"frames": bp(batch["frames"], "batch", None, None)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        ps = {"tokens": bp(batch["tokens"], "batch", None)}
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), dt
+        )
+        ps["vision_embeds"] = bp(batch["vision_embeds"], "batch", None, None)
+        batch["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        ps["positions"] = bp(batch["positions"], "batch", None, None)
+    if step == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        batch["loss_mask"] = jax.ShapeDtypeStruct((B, S), f32)
+        ps["targets"] = bp(batch["targets"], "batch", None)
+        ps["loss_mask"] = bp(batch["loss_mask"], "batch", None)
+    return batch, ps
+
+
+def build_lowerable(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    tc: Optional[train_loop.TrainConfig] = None,
+) -> Lowerable:
+    step = shape.step
+    rules = sh.DECODE_RULES if step == "decode" else sh.TRAIN_RULES
+    batch_sds, batch_ps = _batch_sds(cfg, shape, step, rules, mesh)
+
+    if step == "train":
+        tc = tc or train_loop.TrainConfig(
+            accum_steps=TRAIN_ACCUM.get(cfg.name, 1)
+        )
+        fn = train_loop.make_train_step(cfg, tc)
+        state_sds = train_loop.abstract_state(cfg)
+        state_ps = train_loop.state_pspecs(cfg, rules=rules, mesh=mesh)
+        return Lowerable(
+            fn=fn,
+            args_sds=(state_sds, batch_sds),
+            in_shardings=(state_ps, batch_ps),
+            out_shardings=(state_ps, None),
+            rules=rules,
+            donate_argnums=(0,),
+        )
+
+    params_spec = model_lib.abstract_params(cfg)
+    params_sds = spec_to_sds(params_spec)
+
+    if step == "prefill":
+        # long sequence: sequence-parallel residual (TRAIN_RULES)
+        params_ps = spec_to_pspecs(params_spec, rules=rules, mesh=mesh)
+
+        def prefill_fn(params, batch):
+            return model_lib.prefill(params, cfg, batch, max_len=shape.seq_len)
+
+        return Lowerable(
+            fn=prefill_fn,
+            args_sds=(params_sds, batch_sds),
+            in_shardings=(params_ps, batch_ps),
+            out_shardings=None,
+            rules=rules,
+        )
+
+    # decode
+    params_ps = spec_to_pspecs(params_spec, rules=rules, mesh=mesh)
+    cache_spec = model_lib.cache_specs(cfg, shape.global_batch, shape.seq_len + DECODE_PAD)
+    cache_sds = spec_to_sds(cache_spec)
+    cache_ps = spec_to_pspecs(cache_spec, rules=rules, mesh=mesh)
+
+    def decode_fn(params, batch, cache, cache_len):
+        return model_lib.decode_step(params, cfg, batch, cache, cache_len)
+
+    return Lowerable(
+        fn=decode_fn,
+        args_sds=(params_sds, batch_sds, cache_sds, jax.ShapeDtypeStruct((), jnp.int32)),
+        in_shardings=(params_ps, batch_ps, cache_ps, None),
+        out_shardings=None,
+        rules=rules,
+        donate_argnums=(2,),
+    )
+
+
+def cell_skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    return shape_skip_reason(cfg, SHAPES[shape_name])

@@ -1,0 +1,208 @@
+"""Decoder layers + period-grouped scan over depth.
+
+Layer heterogeneity (jamba's 1:7 attn:mamba interleave, gemma3's 5:1
+local:global windows, MoE periods) repeats with a fixed period P; we stack
+parameters per period-position over ``n_rep = n_layers // P`` repetitions and
+``lax.scan`` over repetitions, applying the P distinct layer bodies in order.
+Compile time is O(P), not O(n_layers).  Layers beyond ``n_rep * P`` (gemma3's
+remainder 2) are unrolled with their own parameters.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, layer_specs, scan_period
+from repro.distributed.sharding import constrain
+from repro.models import attention, mamba, mlp, moe
+from repro.models.common import rms_norm
+from repro.models.params import ParamSpec, is_spec
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+
+def layer_param_specs(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    M, pd = cfg.d_model, cfg.param_dtype
+    p: dict = {"ln1": ParamSpec((M,), "float32", (None,), init="ones")}
+    if spec.kind == "attn":
+        p["attn"] = attention.attn_specs(cfg)
+    else:
+        p["mamba"] = mamba.mamba_specs(cfg)
+    if spec.mlp == "dense":
+        p["ln2"] = ParamSpec((M,), "float32", (None,), init="ones")
+        p["mlp"] = mlp.mlp_specs(cfg)
+    elif spec.mlp == "moe":
+        p["ln2"] = ParamSpec((M,), "float32", (None,), init="ones")
+        p["moe"] = moe.moe_specs(cfg)
+    return p
+
+
+def layer_cache_specs(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int
+) -> Optional[dict]:
+    if spec.kind == "attn":
+        kv = ParamSpec(
+            (batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+            cfg.dtype,
+            ("batch", "kv_seq", "kv_heads", None),
+            init="zeros",
+        )
+        return {"k": kv, "v": kv}
+    return {
+        "h": ParamSpec(
+            (batch, cfg.d_inner, cfg.ssm_state),
+            "float32",
+            ("batch", "ssm_inner", "ssm_state"),
+            init="zeros",
+        ),
+        "conv": ParamSpec(
+            (batch, cfg.d_conv - 1, cfg.d_inner),
+            cfg.dtype,
+            ("batch", None, "ssm_inner"),
+            init="zeros",
+        ),
+    }
+
+
+def apply_layer(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    params: dict,
+    x,
+    positions,
+    cache: Optional[dict] = None,
+    cache_len=None,
+):
+    """Pre-norm residual layer.  Returns (x, new_cache, aux_loss)."""
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        y, new_cache = attention.multihead_attention(
+            params["attn"], h, cfg, positions,
+            window=spec.window, cache=cache, cache_len=cache_len,
+        )
+    else:
+        y, new_cache = mamba.mamba_mixer(params["mamba"], h, cfg, cache=cache)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp == "dense":
+        x = x + mlp.mlp(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps))
+    elif spec.mlp == "moe":
+        y2, aux = moe.moe(params["moe"], rms_norm(x, params["ln2"], cfg.norm_eps), cfg)
+        x = x + y2
+    return constrain(x, "batch", "seq_sp", None), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack: period-grouped scan
+# ---------------------------------------------------------------------------
+
+
+def stack_layout(cfg: ModelConfig):
+    """Returns (period P, n_rep, remainder layer indices)."""
+    P = scan_period(cfg)
+    n_rep = cfg.n_layers // P
+    rem = cfg.n_layers - n_rep * P
+    return P, n_rep, rem
+
+
+def _stack_specs(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, s.dtype, (None,) + s.logical, s.init),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def stack_param_specs(cfg: ModelConfig) -> dict:
+    P, n_rep, rem = stack_layout(cfg)
+    specs = layer_specs(cfg)
+    body = [
+        _stack_specs(layer_param_specs(cfg, specs[i]), n_rep) for i in range(P)
+    ]
+    remainder = [
+        layer_param_specs(cfg, specs[n_rep * P + j]) for j in range(rem)
+    ]
+    return {"body": body, "rem": remainder}
+
+
+def stack_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    P, n_rep, rem = stack_layout(cfg)
+    specs = layer_specs(cfg)
+    body = [
+        _stack_specs(layer_cache_specs(cfg, specs[i], batch, max_len), n_rep)
+        for i in range(P)
+    ]
+    remainder = [
+        layer_cache_specs(cfg, specs[n_rep * P + j], batch, max_len)
+        for j in range(rem)
+    ]
+    return {"body": body, "rem": remainder}
+
+
+def apply_stack(
+    cfg: ModelConfig,
+    params: dict,
+    x,
+    positions,
+    cache=None,
+    cache_len=None,
+    remat: bool = False,
+):
+    """Returns (x, new_cache, aux_sum)."""
+    P, n_rep, rem = stack_layout(cfg)
+    specs = layer_specs(cfg)
+    have_cache = cache is not None
+
+    def one_layer(pos, xc, p_params, c):
+        return apply_layer(
+            cfg, specs[pos], p_params, xc, positions, c, cache_len
+        )
+
+    if remat:
+        # per-layer remat *inside* the period: the period backward otherwise
+        # holds all P layers' recomputed intermediates simultaneously
+        one_layer = jax.checkpoint(
+            one_layer,
+            policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(0,),
+        )
+
+    def period_body(carry, xs):
+        xc, aux = carry
+        p_params, p_cache = xs
+        new_caches = []
+        for pos in range(P):
+            c = p_cache[pos] if have_cache else None
+            xc, nc, a = one_layer(pos, xc, p_params[pos], c)
+            new_caches.append(nc if have_cache else jnp.zeros((), x.dtype))
+            aux = aux + a
+        return (xc, aux), new_caches
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    xs_cache = cache["body"] if have_cache else [jnp.zeros((n_rep,), x.dtype)] * P
+    (x, aux), new_body_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["body"], xs_cache)
+    )
+
+    new_rem_cache = []
+    for j in range(rem):
+        i = n_rep * P + j
+        c = cache["rem"][j] if have_cache else None
+        x, nc, a = apply_layer(cfg, specs[i], params["rem"][j], x, positions, c, cache_len)
+        new_rem_cache.append(nc)
+        aux = aux + a
+
+    new_cache = (
+        {"body": new_body_cache, "rem": new_rem_cache} if have_cache else None
+    )
+    return x, new_cache, aux

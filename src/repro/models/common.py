@@ -1,0 +1,108 @@
+"""Shared building blocks: norms, rotary embeddings, inits, loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    """RMSNorm with fp32 statistics (matches production LM stacks)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + 0.0) * weight.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (default + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / float(half))
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float, mrope_sections=None):
+    """Rotate pairs (x[..., :half], x[..., half:]) — GPT-NeoX convention.
+
+    x: (B, S, H, D); positions: (B, S) or (B, S, 3) for M-RoPE.
+    For M-RoPE, the ``D/2`` rotary frequencies are split into three sections
+    (temporal, height, width), each driven by its own position stream.
+    """
+    half = x.shape[-1] // 2
+    if mrope_sections is not None and positions.ndim == 3:
+        cos_parts, sin_parts = [], []
+        start = 0
+        for sec_i, sec in enumerate(mrope_sections):
+            freqs = 1.0 / (
+                theta ** (jnp.arange(start, start + sec, dtype=jnp.float32) / half)
+            )
+            ang = positions[..., sec_i].astype(jnp.float32)[..., None] * freqs
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+            start += sec
+        cos = jnp.concatenate(cos_parts, axis=-1)
+        sin = jnp.concatenate(sin_parts, axis=-1)
+    else:
+        if positions.ndim == 3:  # M-RoPE positions fed to a default-RoPE layer
+            positions = positions[..., 0]
+        cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    cos = cos[:, :, None, :].astype(x.dtype)  # (B, S, 1, half)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean CE over masked positions.  logits: (..., V) promoted to fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,157 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mixer).
+
+Training/prefill uses a chunked scan: ``lax.scan`` over fixed-size time
+chunks carrying the SSM state, ``lax.associative_scan`` (log-depth) within a
+chunk — bounding live memory to O(B * chunk * d_inner * d_state) while
+keeping compile time independent of sequence length.  Decode is a single
+recurrence step on cached (h, conv) state.  The TPU kernel path is
+``repro.kernels.ssm_scan``.
+
+The channel dimension (d_inner) is sharded over "model": conv, gating and the
+scan are element-wise over channels, so TP needs no collectives outside the
+in/out projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    M, I, N, R, W = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.dt_rank_resolved,
+        cfg.d_conv,
+    )
+    pd = cfg.param_dtype
+    return {
+        "in_proj": ParamSpec((M, 2 * I), pd, ("embed_p", "ssm_inner")),
+        "conv_w": ParamSpec((W, I), pd, ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((I,), pd, ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec((I, R + 2 * N), pd, ("ssm_inner", None)),
+        "dt_proj": ParamSpec((R, I), pd, ("dt_rank", "ssm_inner")),
+        "dt_bias": ParamSpec((I,), "float32", ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((I, N), "float32", ("ssm_inner", "ssm_state"), init="ssm_a"),
+        "D": ParamSpec((I,), "float32", ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((I, M), pd, ("ssm_inner", "embed_p")),
+    }
+
+
+def _conv_shift(x_pad, w, b, S: int):
+    """Causal depthwise conv via shifted adds.  x_pad: (B, S+W-1, I)."""
+    W = w.shape[0]
+    y = None
+    for j in range(W):
+        term = x_pad[:, j : j + S, :] * w[j]
+        y = term if y is None else y + term
+    return y + b
+
+
+def _ssm_chunk(dA, dBx, h0):
+    """Within-chunk scan.  dA/dBx: (B, cs, I, N); h0: (B, I, N).
+
+    Sequential ``lax.scan`` over time: the log-depth associative scan costs
+    O(cs * log cs) live (B, cs, I, N) temporaries in the backward pass,
+    which blows past HBM for d_inner=8192 stacks (jamba/falcon train); the
+    sequential form saves one (B, I, N) carry per step and the chunking
+    bounds the recompute window.  On TPU the fused time loop is
+    ``repro.kernels.ssm_scan``.
+    """
+
+    def step(h, xs):
+        a, b = xs
+        h = a * h + b
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3))
+    )
+    return hs.transpose(1, 0, 2, 3), h_last
+
+
+def mamba_mixer(
+    params: dict,
+    x,
+    cfg: ModelConfig,
+    cache: dict | None = None,
+    chunk: int = 256,
+):
+    """x: (B, S, M) -> (y, new_cache).  cache = {"h": (B,I,N) f32, "conv": (B,W-1,I)}."""
+    B, S, M = x.shape
+    I, N, R, W = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_resolved, cfg.d_conv
+    dt_ = x.dtype
+
+    xz = jnp.einsum("bsm,mi->bsi", x, params["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", "seq", "ssm_inner")
+
+    conv_init = (
+        cache["conv"].astype(dt_)
+        if cache is not None
+        else jnp.zeros((B, W - 1, I), dt_)
+    )
+    x_pad = jnp.concatenate([conv_init, xin], axis=1)
+    new_conv = x_pad[:, -(W - 1) :, :]
+    xc = jax.nn.silu(_conv_shift(x_pad, params["conv_w"].astype(dt_),
+                                 params["conv_b"].astype(dt_), S))
+
+    xdb = jnp.einsum("bsi,ir->bsr", xc, params["x_proj"].astype(dt_))
+    dt_raw, Bm, Cm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, params["dt_proj"].astype(dt_)).astype(
+            jnp.float32
+        )
+        + params["dt_bias"]
+    )  # (B,S,I) fp32
+    A = -jnp.exp(params["A_log"])  # (I,N) fp32
+    Bm32, Cm32, xc32 = (
+        Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )
+
+    h0 = (
+        cache["h"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((B, I, N), jnp.float32)
+    )
+
+    if S == 1:  # decode: single recurrence step
+        dA = jnp.exp(dt[:, 0, :, None] * A)  # (B,I,N)
+        dBx = dt[:, 0, :, None] * Bm32[:, 0, None, :] * xc32[:, 0, :, None]
+        h = dA * h0 + dBx
+        y = jnp.einsum("bin,bn->bi", h, Cm32[:, 0])[:, None, :]  # (B,1,I)
+        h_last = h
+    elif S <= chunk:
+        dA = jnp.exp(dt[..., None] * A)  # (B,S,I,N)
+        dBx = dt[..., None] * Bm32[:, :, None, :] * xc32[..., None]
+        hs, h_last = _ssm_chunk(dA, dBx, h0)
+        y = jnp.einsum("bsin,bsn->bsi", hs, Cm32)
+    else:
+        assert S % chunk == 0, (S, chunk)
+        n = S // chunk
+
+        def body(h_carry, xs):
+            dt_c, B_c, C_c, x_c = xs  # (B,chunk,...)
+            dA = jnp.exp(dt_c[..., None] * A)
+            dBx = dt_c[..., None] * B_c[:, :, None, :] * x_c[..., None]
+            hs, h_out = _ssm_chunk(dA, dBx, h_carry)
+            y_c = jnp.einsum("bsin,bsn->bsi", hs, C_c)
+            return h_out, y_c
+
+        resh = lambda a: a.reshape(B, n, chunk, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1)
+        )
+        h_last, ys = jax.lax.scan(body, h0, (resh(dt), resh(Bm32), resh(Cm32), resh(xc32)))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, I)
+
+    y = (y + xc32 * params["D"]).astype(dt_) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,im->bsm", y, params["out_proj"].astype(dt_))
+    new_cache = {"h": h_last, "conv": new_conv} if cache is not None else None
+    return constrain(out, "batch", "seq", None), new_cache

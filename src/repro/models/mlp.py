@@ -1,0 +1,29 @@
+"""Dense SwiGLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    M = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    pd = cfg.param_dtype
+    return {
+        "w_gate": ParamSpec((M, F), pd, ("embed_p", "mlp")),
+        "w_up": ParamSpec((M, F), pd, ("embed_p", "mlp")),
+        "w_down": ParamSpec((F, M), pd, ("mlp", "embed_p")),
+    }
+
+
+def mlp(params: dict, x):
+    g = jnp.einsum("bsm,mf->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsm,mf->bsf", x, params["w_up"].astype(x.dtype))
+    h = constrain(jax.nn.silu(g) * u, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fm->bsm", h, params["w_down"].astype(x.dtype))
+    # reduce-scatter into the sequence-sharded residual (Megatron-SP)
+    return constrain(y, "batch", "seq_sp", None)

@@ -1,0 +1,193 @@
+"""Top-level model: embeddings, stack, chunked LM loss, prefill/decode.
+
+Public API (all pure functions over param pytrees):
+  abstract_params(cfg)            -> ParamSpec tree (no allocation)
+  init_params(cfg, rng)           -> array tree
+  cache_specs(cfg, batch, max_len)-> ParamSpec tree for the KV/SSM cache
+  train_loss(params, cfg, batch)  -> (loss, metrics)
+  prefill(params, cfg, batch)     -> (last_logits, cache)
+  decode_step(params, cfg, batch, cache, cache_len) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import blocks
+from repro.models.common import rms_norm, softmax_cross_entropy
+from repro.models.params import ParamSpec, materialize, spec_to_sds
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    V, M = cfg.vocab_size, cfg.d_model
+    pd = cfg.param_dtype
+    p = {
+        "embed": ParamSpec((V, M), pd, ("vocab", "embed_p"), init="embed"),
+        "stack": blocks.stack_param_specs(cfg),
+        "final_norm": ParamSpec((M,), "float32", (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = ParamSpec((M, V), pd, ("embed_p", "vocab"))
+    return p
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    return materialize(abstract_params(cfg), rng)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return blocks.stack_cache_specs(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.jnp_dtype),
+        cache_specs(cfg, batch, max_len),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, batch: dict):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(dt)  # stub frontend: precomputed embeddings
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+        if cfg.frontend == "vision" and "vision_embeds" in batch:
+            v = batch["vision_embeds"].astype(dt)
+            x = jax.lax.dynamic_update_slice(x, v, (0, 0, 0))
+    return constrain(x, "batch", "seq", None)
+
+
+def _positions(cfg: ModelConfig, batch: dict, B: int, S: int, cache_len=None):
+    if "positions" in batch:
+        return batch["positions"]
+    if cache_len is not None:
+        pos = jnp.full((B, S), cache_len, jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    else:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # (M, V)
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked LM loss: never materialises (B, S, V) logits
+# ---------------------------------------------------------------------------
+
+
+def chunked_lm_loss(params, cfg: ModelConfig, x, targets, mask, chunk: int = 512):
+    B, S, M = x.shape
+    w = unembed_matrix(params, cfg).astype(x.dtype)
+    if S <= chunk:
+        logits = jnp.einsum("bsm,mv->bsv", x, w)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        nll = softmax_cross_entropy(logits, targets, mask)
+        return nll
+    n = S // chunk
+    assert S % chunk == 0
+
+    # checkpoint: recompute the (B, chunk, V) logits in the backward pass
+    # instead of saving every chunk's logits (V is huge)
+    @jax.checkpoint
+    def body(carry, xs):
+        xc, tc, mc = xs  # (B, chunk, ...)
+        logits = jnp.einsum("bsm,mv->bsv", xc, w)
+        logits = constrain(logits, "batch", "seq", "vocab").astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        mcf = mc.astype(jnp.float32)
+        return (carry[0] + jnp.sum((lse - ll) * mcf), carry[1] + jnp.sum(mcf)), ()
+
+    resh = lambda a: a.reshape(B, n, chunk, *a.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, a.ndim + 1))
+    )
+    (tot, cnt), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (resh(x), resh(targets), resh(mask)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict, remat: bool = True):
+    """Causal-LM (or masked-prediction for encoder archs) training loss."""
+    if cfg.frontend == "audio_frames":
+        B, S = batch["frames"].shape[:2]
+    else:
+        B, S = batch["tokens"].shape
+    x = _embed_tokens(params, cfg, batch)
+    pos = _positions(cfg, batch, B, S)
+    x, _, aux = blocks.apply_stack(cfg, params["stack"], x, pos, remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = constrain(x, "batch", "seq_sp", None)
+    mask = batch.get("loss_mask", jnp.ones((B, S), jnp.float32))
+    nll = chunked_lm_loss(params, cfg, x, batch["targets"], mask)
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int | None = None):
+    """Forward over a prompt, filling the cache.  Returns (last_logits, cache)."""
+    if cfg.frontend == "audio_frames":
+        B, S = batch["frames"].shape[:2]
+    else:
+        B, S = batch["tokens"].shape
+    max_len = max_len or S
+    x = _embed_tokens(params, cfg, batch)
+    pos = _positions(cfg, batch, B, S)
+    if cfg.encoder_only:
+        x, _, _ = blocks.apply_stack(cfg, params["stack"], x, pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsm,mv->bsv", x, unembed_matrix(params, cfg).astype(x.dtype)
+        )
+        return logits[:, -1], None
+    cache = init_cache(cfg, B, max_len)
+    x, cache, _ = blocks.apply_stack(
+        cfg, params["stack"], x, pos, cache=cache, cache_len=jnp.zeros((), jnp.int32)
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = jnp.einsum(
+        "bsm,mv->bsv", last, unembed_matrix(params, cfg).astype(x.dtype)
+    )
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: dict, cache, cache_len):
+    """One incremental token.  batch["tokens"]: (B, 1).  Returns (logits, cache)."""
+    B, S = batch["tokens"].shape
+    x = _embed_tokens(params, cfg, batch)
+    pos = _positions(cfg, batch, B, S, cache_len=cache_len)
+    x, cache, _ = blocks.apply_stack(
+        cfg, params["stack"], x, pos, cache=cache, cache_len=cache_len
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsm,mv->bsv", x, unembed_matrix(params, cfg).astype(x.dtype)
+    )
+    return logits[:, 0], cache

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts layer.
+
+Baseline path: GShard-style grouped capacity dispatch expressed as einsums —
+predictably shardable under GSPMD (groups -> "batch" axes, experts ->
+"model").  The dispatch/combine one-hot einsums cost ~2*T*M*E*C extra FLOPs;
+EXPERIMENTS.md §Perf swaps in the sort-based EP all-to-all path
+(``repro.distributed.ep_a2a``) which removes them.
+
+Routing: softmax router, top-k, Switch-style load-balancing aux loss.
+Tokens beyond expert capacity are dropped (contribute zero) — standard
+capacity-factor semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    M, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    pd = cfg.param_dtype
+    specs = {
+        "w_router": ParamSpec((M, E), "float32", ("embed_p", None)),
+        "w_gate": ParamSpec((E, M, F), pd, ("experts", "embed_p", "expert_mlp")),
+        "w_up": ParamSpec((E, M, F), pd, ("experts", "embed_p", "expert_mlp")),
+        "w_down": ParamSpec((E, F, M), pd, ("experts", "expert_mlp", "embed_p")),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * cfg.d_ff_expert
+        specs["shared"] = {
+            "w_gate": ParamSpec((M, Fs), pd, ("embed_p", "mlp")),
+            "w_up": ParamSpec((M, Fs), pd, ("embed_p", "mlp")),
+            "w_down": ParamSpec((Fs, M), pd, ("mlp", "embed_p")),
+        }
+    return specs
+
+
+def _capacity(gs: int, k: int, e: int, factor: float = 1.25) -> int:
+    c = int(-(-gs * k * factor // e))
+    return max(4, -(-c // 4) * 4) if gs > 1 else max(1, c)
+
+
+def moe(params: dict, x, cfg: ModelConfig, group_size: int = 256):
+    """x: (B, S, M) -> (y, aux_loss)."""
+    B, S, M = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+
+    if S == 1:  # decode: one token per group, capacity 1 slot per expert
+        gs = 1
+    else:
+        gs = min(group_size, S)
+    gr = (B * S) // gs
+    C = _capacity(gs, K, E)
+    xg = x.reshape(gr, gs, M)
+    xg = constrain(xg, "batch", None, None)
+
+    # --- routing (fp32 softmax; bf16 dot so cotangents stay bf16 — a f32
+    # router dot leaks f32 into every MoE gradient collective, §Perf H7) ---
+    logits = jnp.einsum(
+        "gsm,me->gse", xg, params["w_router"].astype(dt),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, ids = jax.lax.top_k(probs, K)  # (gr, gs, K)
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * mean_e(frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    onehot_top1 = jax.nn.one_hot(ids[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # --- position of each (token, k) within its expert (per group) ---
+    oh = jax.nn.one_hot(ids.reshape(gr, gs * K), E, dtype=jnp.int32)  # (gr,T,E)
+    pos = jnp.cumsum(oh, axis=1) - 1  # (gr, T, E)
+    pos_k = jnp.take_along_axis(
+        pos, ids.reshape(gr, gs * K)[..., None], axis=-1
+    )[..., 0].reshape(gr, gs, K)
+    keep = (pos_k < C).astype(jnp.float32) * (gate_w > 0)
+
+    # combine tensor (gr, gs, E, C): sum_k gate_w_k * onehot(e_k) x onehot(c_k)
+    eh = jax.nn.one_hot(ids, E, dtype=dt)  # (gr, gs, K, E)
+    ch = jax.nn.one_hot(jnp.clip(pos_k, 0, C - 1), C, dtype=dt)  # (gr, gs, K, C)
+    combine = jnp.einsum(
+        "gske,gskc->gsec", eh * (gate_w * keep).astype(dt)[..., None], ch
+    )
+    dispatch = (combine > 0).astype(dt)
+    combine = constrain(combine, "batch", None, "experts", None)
+    dispatch = constrain(dispatch, "batch", None, "experts", None)
+
+    # --- dispatch -> expert FFN -> combine ---
+    expert_in = jnp.einsum("gsec,gsm->egcm", dispatch, xg)
+    expert_in = constrain(expert_in, "experts", "batch", None, None)
+    g = jnp.einsum("egcm,emf->egcf", expert_in, params["w_gate"].astype(dt))
+    u = jnp.einsum("egcm,emf->egcf", expert_in, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    eo = jnp.einsum("egcf,efm->egcm", h, params["w_down"].astype(dt))
+    eo = constrain(eo, "experts", "batch", None, None)
+    y = jnp.einsum("gsec,egcm->gsm", combine, eo)
+    # reduce-scatter the expert-partial output into the seq-sharded residual
+    y = constrain(y.reshape(B, S, M), "batch", "seq_sp", None)
+
+    if "shared" in params:
+        from repro.models.mlp import mlp as dense_mlp
+
+        y = y + dense_mlp(params["shared"], x)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,109 @@
+"""Parameter metadata trees.
+
+``abstract_params`` builds a pytree of :class:`ParamSpec` (shape, dtype,
+logical axes) with **no allocation** — the dry-run lowers directly from these.
+``materialize`` turns the same tree into real arrays with path-keyed RNG.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import to_pspec
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: str
+    logical: Tuple  # logical axis names, len == len(shape)
+    init: str = "dense"  # "dense" | "embed" | "zeros" | "ones" | "ssm_a"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def spec_to_sds(tree):
+    """ParamSpec tree -> jax.ShapeDtypeStruct tree (for .lower())."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.jnp_dtype), tree
+    )
+
+
+def spec_to_pspecs(tree, rules=None, mesh=None):
+    """ParamSpec tree -> PartitionSpec tree (for in_shardings)."""
+    return tree_map_specs(
+        lambda s: to_pspec(s.logical, rules=rules, mesh=mesh, shape=s.shape),
+        tree,
+    )
+
+
+def constrain_like(tree, spec_tree):
+    """Apply with_sharding_constraint to every leaf per its ParamSpec logical
+    axes (no-op without an active sharding context).  Used to force XLA to
+    keep gradients / optimizer updates in the parameters' sharded layout
+    instead of falling back to replicated math."""
+    import jax as _jax
+    from repro.distributed.sharding import active_mesh, constrain
+
+    if active_mesh() is None:
+        return tree
+
+    def one(leaf, spec):
+        return constrain(leaf, *spec.logical)
+
+    return _jax.tree_util.tree_map(
+        lambda s, l: one(l, s), spec_tree, tree, is_leaf=is_spec
+    )
+
+
+def _path_key(root_key, path) -> jax.Array:
+    h = hashlib.md5("/".join(str(p) for p in path).encode()).digest()
+    return jax.random.fold_in(root_key, int.from_bytes(h[:4], "little"))
+
+
+def materialize(tree, root_key):
+    """Instantiate a ParamSpec tree into real arrays (smoke tests, examples)."""
+
+    def init_one(path, spec: ParamSpec):
+        key = _path_key(root_key, [getattr(p, "key", getattr(p, "idx", p)) for p in path])
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.jnp_dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.jnp_dtype)
+        if spec.init == "embed":
+            x = jax.random.normal(key, spec.shape, jnp.float32) * 0.02
+        elif spec.init == "ssm_a":
+            # mamba A_log init: log(1..d_state) broadcast over channels
+            n = spec.shape[-1]
+            a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+            x = jnp.broadcast_to(a, spec.shape)
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+            x = jax.random.normal(key, spec.shape, jnp.float32) / jnp.sqrt(
+                float(max(fan_in, 1))
+            )
+        return x.astype(spec.jnp_dtype)
+
+    return jax.tree_util.tree_map_with_path(init_one, tree, is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    import numpy as np
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_spec):
+        shape = leaf.shape if is_spec(leaf) else leaf.shape
+        total += int(np.prod(shape)) if len(shape) else 1
+    return total

@@ -1,0 +1,125 @@
+"""Train-step factory: grad accumulation, remat, optional grad compression.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function ready for jit/pjit; ``abstract_state``/``state_pspecs`` provide the
+ShapeDtypeStruct and PartitionSpec trees the dry-run lowers against without
+allocating anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import grad_compress
+from repro.models import model as model_lib
+from repro.models import params as params_meta
+from repro.models.params import spec_to_pspecs, spec_to_sds
+from repro.train import optimizer as opt_lib
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1
+    remat: bool = True
+    compress_grads: bool = False  # int8 + error feedback (numerics-faithful)
+    opt: opt_lib.OptConfig = opt_lib.OptConfig()
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt_lib.OptState
+
+
+def init_state(cfg: ModelConfig, rng) -> TrainState:
+    params = model_lib.init_params(cfg, rng)
+    return TrainState(params=params, opt=opt_lib.init_state(params))
+
+
+def abstract_state(cfg: ModelConfig) -> TrainState:
+    """ShapeDtypeStruct tree of the full train state (no allocation)."""
+    pspec = model_lib.abstract_params(cfg)
+    params = spec_to_sds(pspec)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return TrainState(
+        params=params,
+        opt=opt_lib.OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree_util.tree_map(f32, params),
+            nu=jax.tree_util.tree_map(f32, params),
+        ),
+    )
+
+
+def state_pspecs(cfg: ModelConfig, rules=None, mesh=None) -> TrainState:
+    from jax.sharding import PartitionSpec as P
+
+    pspec_tree = model_lib.abstract_params(cfg)
+    pp = spec_to_pspecs(pspec_tree, rules=rules, mesh=mesh)
+    return TrainState(
+        params=pp,
+        opt=opt_lib.OptState(
+            step=P(),
+            mu=jax.tree_util.tree_map(lambda x: x, pp),
+            nu=jax.tree_util.tree_map(lambda x: x, pp),
+        ),
+    )
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    def loss_fn(params, batch):
+        loss, metrics = model_lib.train_loss(params, cfg, batch, remat=tc.remat)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if tc.accum_steps <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        # microbatch accumulation: split the global batch's leading axis
+        n = tc.accum_steps
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), acc, g
+            )
+            return (acc, loss_acc + loss), ()
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch
+        )
+        (gsum, loss_sum), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
+        return loss_sum / n, {"nll": loss_sum / n, "aux": jnp.zeros(())}, grads
+
+    param_specs = model_lib.abstract_params(cfg)
+
+    def train_step(state: TrainState, batch: dict):
+        loss, metrics, grads = grads_of(state.params, batch)
+        # keep gradients in the parameters' sharded layout (otherwise the
+        # SPMD partitioner may run the whole optimizer replicated)
+        grads = params_meta.constrain_like(grads, param_specs)
+        if tc.compress_grads:
+            grads = jax.tree_util.tree_map(
+                lambda g: grad_compress.decompress(
+                    *grad_compress.compress(g), dtype=g.dtype
+                ),
+                grads,
+            )
+        new_params, new_opt, om = opt_lib.apply_updates(
+            state.params, grads, state.opt, tc.opt
+        )
+        metrics = dict(metrics, loss=loss, **om)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,54 @@
+"""HLO parser: computation graph, trip counts, collective attribution."""
+from repro.launch.hlo_analysis import (
+    collective_stats_attributed,
+    parse_computations,
+)
+
+SYNTH = """\
+HloModule jit_step
+
+%body.1 (arg: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %p = (s32[], bf16[8,128]) parameter(0)
+  %ag.1 = bf16[8,128]{1,0} all-gather(%x), replica_groups={}, dimensions={0}
+  %ar.1 = f32[4,64]{1,0} all-reduce(%y), to_apply=%add
+  ROOT %t = (s32[], bf16[8,128]) tuple(%i, %ag.1)
+}
+
+%cond.1 (arg: (s32[], bf16[8,128])) -> pred[] {
+  %p2 = (s32[], bf16[8,128]) parameter(0)
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main.9 (a: bf16[8,128]) -> bf16[8,128] {
+  %w = (s32[], bf16[8,128]) while(%init), condition=%cond.1, body=%body.1
+  %ag.2 = bf16[16,16]{1,0} all-gather(%z), dimensions={0}
+  ROOT %r = bf16[8,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_computations():
+    comps = parse_computations(SYNTH)
+    assert set(comps) == {"body.1", "cond.1", "main.9"}
+    assert comps["main.9"]["entry"]
+    assert comps["body.1"]["collectives"][0][0] == "all-gather"
+    assert comps["cond.1"]["consts"] == [24]
+    assert comps["main.9"]["whiles"] == [("cond.1", "body.1")]
+
+
+def test_trip_attribution():
+    stats = collective_stats_attributed(SYNTH)
+    # in-loop all-gather: 8*128*2 bytes * 24 trips
+    assert stats["all-gather"]["bytes"] == 8 * 128 * 2 * 24 + 16 * 16 * 2
+    # in-loop all-reduce: 4*64*4 bytes * factor 2 * 24
+    assert stats["all-reduce"]["bytes"] == 4 * 64 * 4 * 2 * 24
+    assert stats["total_bytes"] == (
+        stats["all-gather"]["bytes"] + stats["all-reduce"]["bytes"]
+    )
+
+
+def test_no_entry_fallback():
+    txt = SYNTH.replace("ENTRY ", "")
+    stats = collective_stats_attributed(txt)
+    assert stats["total_bytes"] > 0

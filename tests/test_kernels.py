@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lags_select import lags_select
+from repro.kernels.ssm_scan import ssm_scan
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("B,H,S,D", [(1, 1, 128, 64), (2, 2, 256, 128),
+                                     (1, 4, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+def test_flash_attention(B, H, S, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, D), jnp.float32).astype(dtype)
+               for kk in ks)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=128, bk=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 256)])
+def test_flash_attention_blocks(bq, bk):
+    B, H, S, D = 1, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, D)) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,L,D", [(1, 2, 512, 64), (2, 4, 1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, L, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, H, L, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, H, L, D), jnp.float32).astype(dtype)
+    kv_len = jnp.asarray([L // 2, L][:B].__mul__(1) if B == 2 else [L // 3])
+    kv_len = jnp.asarray([L // 3] if B == 1 else [L // 2, L - 7])
+    out = decode_attention(q, k, v, kv_len, bk=256, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("B,S,I,N", [(1, 128, 256, 8), (2, 256, 512, 16)])
+@pytest.mark.parametrize("chunk,bi", [(64, 256), (128, 128)])
+def test_ssm_scan(B, S, I, N, chunk, bi):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, I, 1)) - 1.0)
+    dA = jnp.exp(-dt * jnp.exp(jax.random.normal(ks[1], (1, 1, I, N)) * 0.2))
+    dBx = dt * jax.random.normal(ks[2], (B, S, I, N)) * 0.1
+    C = jax.random.normal(ks[3], (B, S, N))
+    h0 = jnp.zeros((B, I, N))
+    y, h = ssm_scan(dA, dBx, C, h0, chunk=chunk, bi=min(bi, I), interpret=True)
+    y_ref, h_ref = ref.ssm_scan_ref(dA, dBx, C, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_nonzero_h0():
+    B, S, I, N = 1, 128, 128, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    dA = jnp.clip(jax.random.uniform(ks[0], (B, S, I, N)), 0.5, 0.99)
+    dBx = jax.random.normal(ks[1], (B, S, I, N)) * 0.05
+    C = jax.random.normal(ks[2], (B, S, N))
+    h0 = jax.random.normal(ks[3], (B, I, N))
+    y, h = ssm_scan(dA, dBx, C, h0, chunk=32, bi=128, interpret=True)
+    y_ref, h_ref = ref.ssm_scan_ref(dA, dBx, C, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,k", [(64, 4), (200, 12), (1024, 16)])
+def test_lags_select(T, k):
+    rng = np.random.default_rng(T)
+    load = jnp.asarray(rng.uniform(0, 2, T), jnp.float32)
+    credit = jnp.asarray(rng.uniform(0, 2, T), jnp.float32)
+    frac = jnp.asarray(rng.uniform(0, 1, T), jnp.float32)
+    runnable = jnp.asarray(rng.uniform(size=T) < 0.5)
+    nl, nc, idx = lags_select(load, credit, frac, runnable, k, interpret=True)
+    rl, rc, ridx, _ = ref.lags_select_ref(load, credit, frac, runnable, k)
+    np.testing.assert_allclose(np.asarray(nl), np.asarray(rl), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(nc), np.asarray(rc), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_lags_select_few_runnable():
+    T, k = 100, 8
+    runnable = jnp.zeros(T, bool).at[jnp.asarray([5, 50])].set(True)
+    z = jnp.zeros(T, jnp.float32)
+    credit = jnp.arange(T, dtype=jnp.float32)
+    nl, nc, idx = lags_select(z, credit, z, runnable, k, interpret=True)
+    assert list(np.asarray(idx)[:2]) == [5, 50]
+    assert all(i == -1 for i in np.asarray(idx)[2:])

@@ -1,0 +1,60 @@
+"""Load Credit metric: PELT + EMA math, numpy/JAX agreement, properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import load_credit as lc
+
+
+def test_pelt_halflife():
+    # after exactly `halflife` ticks of zero input, load halves
+    load = 1.0
+    for _ in range(lc.PELT_HALFLIFE_TICKS):
+        load = lc.pelt_update(load, 0.0)
+    # geometric decay plus (1-y)*0 contributions
+    assert abs(load - 0.5) < 0.02
+
+
+def test_ema_window_response():
+    # steady input converges to that input; window controls speed
+    fast = slow = 0.0
+    for _ in range(500):
+        fast = lc.ema_update(fast, 1.0, window_ticks=100)
+        slow = lc.ema_update(slow, 1.0, window_ticks=2000)
+    assert fast > 0.99 and 0.2 < slow < 0.6
+
+
+@given(
+    st.lists(st.floats(0.0, 12.0), min_size=1, max_size=200),
+    st.integers(10, 2000),
+)
+@settings(max_examples=50, deadline=None)
+def test_credit_bounded_by_max_input(inputs, window):
+    """Credit never exceeds the max running fraction seen (convexity)."""
+    t = lc.LoadCreditTracker(1, window_ticks=window)
+    for x in inputs:
+        t.tick(np.asarray([x]))
+    assert 0.0 <= t.credit[0] <= max(inputs) + 1e-9
+
+
+@given(st.integers(1, 64), st.integers(0, 200))
+@settings(max_examples=30, deadline=None)
+def test_numpy_jax_agree(n_groups, steps):
+    rng = np.random.default_rng(steps)
+    tracker = lc.LoadCreditTracker(n_groups)
+    state = (jnp.zeros(n_groups), jnp.zeros(n_groups))
+    for _ in range(steps % 37):
+        frac = rng.uniform(0, 2, n_groups)
+        c_np = tracker.tick(frac)
+        state, c_jax = lc.jax_tick(state, jnp.asarray(frac))
+        np.testing.assert_allclose(c_np, np.asarray(c_jax), rtol=1e-5,
+                                   atol=1e-7)
+
+
+def test_lightest_group_ordering():
+    """A group that ran less recently has lower credit (LAS property)."""
+    t = lc.LoadCreditTracker(2, window_ticks=100)
+    for i in range(300):
+        t.tick(np.asarray([1.0, 0.2]))
+    assert t.credit[1] < t.credit[0]

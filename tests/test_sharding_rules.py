@@ -1,0 +1,87 @@
+"""Logical-axis resolution: divisibility, duplicate-axis handling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+jax = pytest.importorskip("jax")
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.distributed import sharding as sh  # noqa: E402
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.asarray(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, axes)
+
+
+MESH = _mesh()
+
+
+def test_divisible_kept():
+    ps = sh.to_pspec(("batch", "heads"), rules=sh.TRAIN_RULES, mesh=MESH,
+                     shape=(8, 4))
+    assert ps == P("data", "model")
+
+
+def test_nondivisible_dropped():
+    ps = sh.to_pspec(("batch", "heads"), rules=sh.TRAIN_RULES, mesh=MESH,
+                     shape=(3, 4))
+    assert ps == P(None, "model")
+
+
+def test_duplicate_axis_first_wins():
+    # kv_seq and kv_heads both map to "model" in DECODE_RULES
+    ps = sh.to_pspec(("batch", "kv_seq", "kv_heads", None),
+                     rules=sh.DECODE_RULES, mesh=MESH, shape=(4, 8, 8, 16))
+    assert ps == P("data", "model", None, None)
+
+
+def test_tuple_axis_prefix_fallback():
+    mesh3 = _mesh((2, 2, 1), ("pod", "data", "model"))
+    # batch=2 divisible by pod(2) but not pod*data(4): falls back to ("pod",)
+    ps = sh.to_pspec(("batch",), rules=sh.TRAIN_RULES, mesh=mesh3, shape=(2,))
+    assert ps == P("pod")
+
+
+def test_missing_mesh_axis_filtered():
+    ps = sh.to_pspec(("batch",), rules=sh.TRAIN_RULES, mesh=MESH, shape=(8,))
+    # ("pod","data") -> pod absent on 2-axis mesh -> data only
+    assert ps == P("data")
+
+
+@given(
+    st.lists(
+        st.sampled_from([None, "batch", "heads", "mlp", "vocab", "embed_p",
+                         "experts", "kv_seq"]),
+        min_size=1, max_size=5,
+    ),
+    st.lists(st.integers(1, 64), min_size=5, max_size=5),
+)
+@settings(max_examples=100, deadline=None)
+def test_resolution_always_valid(logical, dims):
+    """Property: resolved specs never violate divisibility or axis reuse."""
+    shape = tuple(dims[: len(logical)])
+    ps = sh.to_pspec(tuple(logical), rules=sh.DECODE_RULES, mesh=MESH,
+                     shape=shape)
+    sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+    used = []
+    for dim, entry in zip(shape, tuple(ps)):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        prod = 1
+        for a in axes:
+            assert a not in used, "mesh axis used twice"
+            used.append(a)
+            prod *= sizes[a]
+        assert dim % prod == 0, "non-divisible sharding emitted"
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 4))
+    assert sh.constrain(x, "batch", None) is x

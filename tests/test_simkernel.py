@@ -1,0 +1,100 @@
+"""Node-simulator invariants + paper-level behaviour checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.policies import make_policy
+from repro.core.simkernel import SimConfig, SimResult, Workload, simulate
+from repro.core.traces import make_workload
+
+
+def _tiny_workload(n_fns=4, rate=2.0, dur=10.0, seed=0, threads=4):
+    rng = np.random.default_rng(seed)
+    arr, svc = [], []
+    for f in range(n_fns):
+        n = rng.poisson(rate * dur)
+        arr.append(np.sort(rng.uniform(0, dur, n)))
+        svc.append(np.full(n, 0.05))
+    return Workload(n_fns, arr, svc, threads, duration_s=dur)
+
+
+@given(st.integers(1, 5), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_conservation(n_fns, seed):
+    """Completed work + switch time <= core capacity; counts consistent."""
+    wl = _tiny_workload(n_fns=n_fns, seed=seed)
+    r = simulate(wl, make_policy("cfs"), SimConfig(n_cores=4))
+    cap = 4 * wl.duration_s
+    assert r.busy_time_s + r.switch_time_s <= cap + 1e-6
+    assert r.n_completed <= r.n_arrived
+    # latency >= service demand, up to one tick of arrival-alignment slop
+    assert (r.latencies >= 0.05 - 0.0045).all()
+
+
+def test_work_conservation_underload():
+    """With spare capacity, everything completes with near-service latency."""
+    wl = _tiny_workload(n_fns=2, rate=1.0, dur=20.0)
+    r = simulate(wl, make_policy("cfs"), SimConfig(n_cores=12))
+    assert r.n_completed >= r.n_arrived - 2  # tail arrivals may be in flight
+    assert r.pct(50) < 0.06
+
+
+@pytest.mark.parametrize("pol", ["cfs", "lags", "eevdf", "rr", "cfs-tuned"])
+def test_policies_complete_work(pol):
+    wl = _tiny_workload(n_fns=6, rate=2.0, dur=15.0)
+    r = simulate(wl, make_policy(pol), SimConfig(n_cores=4))
+    assert r.n_completed > 0.8 * r.n_arrived
+
+
+def test_lags_beats_cfs_under_overload():
+    """Paper Figs 8/9: at high colocation LAGS completes more within SLO
+    and keeps the median flat."""
+    n_fns = 19 * 12
+    cfs = simulate(
+        make_workload("azure2021", n_fns, duration_s=25.0, seed=1),
+        make_policy("cfs"), SimConfig(),
+    )
+    lags = simulate(
+        make_workload("azure2021", n_fns, duration_s=25.0, seed=1),
+        make_policy("lags"), SimConfig(),
+    )
+    assert lags.throughput_slo() > 1.3 * cfs.throughput_slo()
+    assert lags.pct(50) < 0.5 * cfs.pct(50)
+    assert lags.overhead_frac < cfs.overhead_frac
+
+
+def test_overhead_grows_with_density():
+    """Paper Fig 3b: overhead grows superlinearly with colocation."""
+    ovh = []
+    for d in (3, 9, 19):
+        r = simulate(
+            make_workload("azure2021", d * 12, duration_s=20.0, seed=1),
+            make_policy("cfs"), SimConfig(),
+        )
+        ovh.append(r.overhead_frac)
+    assert ovh[0] < ovh[1] < ovh[2]
+    assert ovh[2] > 0.15  # ~20-28 % at density 19
+
+
+def test_switch_cost_disabled():
+    wl = _tiny_workload(n_fns=8, rate=4.0, dur=10.0)
+    on = simulate(wl, make_policy("cfs"), SimConfig(n_cores=2))
+    off = simulate(
+        _tiny_workload(n_fns=8, rate=4.0, dur=10.0),
+        make_policy("cfs"), SimConfig(n_cores=2, model_switch_cost=False),
+    )
+    assert off.switch_time_s == 0.0
+    assert off.busy_time_s >= on.busy_time_s - 1e-9
+
+
+def test_resctl_closed_loop_constant():
+    """resctl throughput is density-independent (paper Fig 3a)."""
+    thr = []
+    for d in (3, 19):
+        r = simulate(
+            make_workload("resctl", d * 12, duration_s=15.0, seed=1),
+            make_policy("cfs"), SimConfig(),
+        )
+        thr.append(r.throughput_slo())
+    assert abs(thr[0] - thr[1]) / max(thr[0], 1e-9) < 0.1

@@ -1,0 +1,57 @@
+"""JAX tick simulator: agreement with the numpy engine + vmap over nodes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simkernel_jax as sj
+from repro.core.policies import make_policy
+from repro.core.simkernel import SimConfig, simulate
+from repro.core.traces import make_workload
+
+
+def _setup(n_fns=40, dur=15.0, seed=3, threads=8):
+    wl = make_workload("azure2021", n_fns, duration_s=dur, seed=seed,
+                       threads_per_fn=threads)
+    trace = sj.build_slot_trace(wl, n_fns, threads)
+    return wl, trace
+
+
+def test_matches_numpy_engine():
+    wl, trace = _setup()
+    for name, code in (("cfs", sj.CFS), ("lags", sj.LAGS)):
+        p = sj.SimParams(n_cores=12, n_fns=40, n_ticks=int(15.0 / sj.TICK),
+                         policy=code)
+        out = sj.simulate(trace, p)
+        lat = sj.latencies_from(trace, out["done_tick"])
+        wl2 = make_workload("azure2021", 40, duration_s=15.0, seed=3,
+                            threads_per_fn=8)
+        r = simulate(wl2, make_policy(name), SimConfig())
+        # same completion count, comparable medians and overhead
+        assert abs(len(lat) - r.n_completed) <= max(3, 0.05 * r.n_completed)
+        assert abs(np.median(lat) - r.pct(50)) < 0.25 * max(r.pct(50), 0.05)
+        ovh_jax = float(out["overhead_s"]) / (12 * 15.0)
+        assert abs(ovh_jax - r.overhead_frac) < 0.05
+
+
+def test_vmap_over_nodes():
+    """Cluster-scale: many simulated nodes in one jit via vmap."""
+    _, trace = _setup(n_fns=10, dur=5.0, threads=4)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x, x]), trace
+    )
+    p = sj.SimParams(n_cores=4, n_fns=10, n_ticks=int(5.0 / sj.TICK))
+    out = jax.vmap(lambda t: sj.simulate(t, p))(stacked)
+    assert out["done_tick"].shape[0] == 2
+    # identical traces -> identical results
+    np.testing.assert_array_equal(
+        np.asarray(out["done_tick"][0]), np.asarray(out["done_tick"][1])
+    )
+
+
+def test_jit_cache_and_grad_free():
+    _, trace = _setup(n_fns=6, dur=2.0, threads=2)
+    p = sj.SimParams(n_cores=2, n_fns=6, n_ticks=int(2.0 / sj.TICK))
+    out1 = sj.simulate(trace, p)
+    out2 = sj.simulate(trace, p)
+    np.testing.assert_array_equal(np.asarray(out1["done_tick"]),
+                                  np.asarray(out2["done_tick"]))

@@ -1,0 +1,34 @@
+"""Switch-cost model calibration against the paper's measurements."""
+import numpy as np
+
+from repro.core.switch_cost import calibration_table, switch_cost_us
+
+
+def test_calibration_bands():
+    t = calibration_table()
+    # Fig 3c: standalone low colocation < 10 us
+    assert t["standalone_low_density"] < 10.0
+    # Fig 3c: standalone density 19x cross-group ~ up to 20 us
+    assert 14.0 <= t["standalone_density19_cross"] <= 24.0
+    # same-group switch is much cheaper (leaf-rq-only put_prev)
+    assert t["standalone_density19_same"] < 0.5 * t["standalone_density19_cross"]
+    # §3.2: Knative cluster node ~ 48 us
+    assert 40.0 <= t["cluster_100pods_cross"] <= 58.0
+
+
+def test_monotonicity():
+    # cost grows with queue length, hierarchy depth, and cgroup crossing
+    base = switch_cost_us(True, siblings=2, groups=10, depth=2)
+    assert switch_cost_us(True, siblings=20, groups=10, depth=2) > base
+    assert switch_cost_us(False, siblings=2, groups=10, depth=2) > base
+    assert (
+        switch_cost_us(False, siblings=2, groups=10, depth=5)
+        > switch_cost_us(False, siblings=2, groups=10, depth=2)
+    )
+
+
+def test_vectorised():
+    same = np.asarray([True, False, True])
+    out = switch_cost_us(same, siblings=np.asarray([1, 4, 16]), groups=50)
+    assert out.shape == (3,)
+    assert out[1] > out[0]

@@ -1,0 +1,50 @@
+"""Trace synthesis: demand bands, calibration, workload kinds."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import traces
+
+
+def test_band_structure():
+    rates = traces.band_rates()
+    assert len(rates) == traces.N_BANDS
+    assert (np.diff(rates) > 0).all()  # sorted ascending like Fig 2
+    assert rates[-1] / rates[0] > 100  # heavy skew
+
+
+def test_calibration_at_peak_density():
+    """Aggregate mean demand at 9x is ~60 % of raw capacity (bursty trace
+    saturates during overlaps — §3 calibration)."""
+    n = traces.PEAK_DENSITY * 12
+    total = traces.fn_rates(n, seed=0).sum()
+    capacity = 12 / traces.MEAN_EXEC_S
+    assert 0.45 * capacity < total < 0.75 * capacity
+
+
+@given(st.sampled_from(["azure2021", "random", "resctl", "resctl-parallel",
+                        "resctl-mix"]), st.integers(10, 80))
+@settings(max_examples=20, deadline=None)
+def test_workload_wellformed(kind, n_fns):
+    wl = traces.make_workload(kind, n_fns, duration_s=10.0, seed=1)
+    assert wl.n_fns == n_fns
+    assert len(wl.arrivals) == n_fns
+    for a in wl.arrivals:
+        assert (np.diff(a) >= 0).all()
+        assert ((a >= 0) & (a <= 10.0)).all()
+    if kind.startswith("resctl"):
+        assert wl.closed_loop_slots > 0
+    if kind == "resctl-parallel":
+        assert wl.parallelism == 2
+
+
+def test_mix_composition():
+    wl = traces.make_workload("resctl-mix", 10, seed=0)
+    svc = np.concatenate(wl.service_s)
+    vals, counts = np.unique(svc, return_counts=True)
+    assert set(vals) == {0.010, 0.100, 1.000}
+
+
+def test_lightest_band_fns():
+    ids = traces.lightest_band_fns(100, 2)
+    assert (traces.demand_band_of(100)[ids] < 2).all()

@@ -1,0 +1,165 @@
+"""Optimizer, data pipeline, checkpointing, grad compression, fault logic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import get_config, reduced
+from repro.distributed import fault, grad_compress
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train.data import DataConfig, TokenStream
+
+
+# --- optimizer --------------------------------------------------------------
+
+
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init_state(params)
+    cfg = opt.OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                        weight_decay=0.0)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clip_norm():
+    params = {"w": jnp.zeros(3)}
+    state = opt.init_state(params)
+    cfg = opt.OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    _, _, metrics = opt.apply_updates(
+        params, {"w": jnp.asarray([1e4, 0.0, 0.0])}, state, cfg
+    )
+    assert float(metrics["grad_norm"]) > 1e3  # raw norm reported
+
+
+def test_schedule_shape():
+    cfg = opt.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(opt.schedule(cfg, 0)) < 0.11
+    assert float(opt.schedule(cfg, 10)) == pytest.approx(1.0, rel=0.01)
+    assert float(opt.schedule(cfg, 100)) < 0.2
+
+
+# --- data -------------------------------------------------------------------
+
+
+def test_data_deterministic_and_shardwise_distinct():
+    cfg = reduced(get_config("qwen3-8b"))
+    s0 = TokenStream(cfg, 4, 32, DataConfig(), shard=0, n_shards=2)
+    s0b = TokenStream(cfg, 4, 32, DataConfig(), shard=0, n_shards=2)
+    s1 = TokenStream(cfg, 4, 32, DataConfig(), shard=1, n_shards=2)
+    a, b, c = s0.batch_at(7), s0b.batch_at(7), s1.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].min() >= 0
+
+
+# --- checkpoint -------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.int32)}}
+    d = str(tmp_path)
+    ckpt.save(d, 3, tree)
+    assert ckpt.latest_step(d) == 3
+    assert ckpt.verify(d, 3)
+    back = ckpt.restore(d, 3, tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A torn write (leftover .tmp) is never visible as a checkpoint."""
+    d = str(tmp_path)
+    tree = {"a": jnp.ones(3)}
+    ckpt.save(d, 1, tree)
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.ones(8)}
+    path = ckpt.save(d, 5, tree)
+    fn = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    with open(os.path.join(path, fn), "r+b") as f:
+        f.seek(-1, 2)
+        f.write(b"\x7f")
+    assert not ckpt.verify(d, 5)
+
+
+# --- grad compression -------------------------------------------------------
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_int8_compress_error_bounded(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(256) * rng.uniform(0.01, 10))
+    q, scale = grad_compress.compress(g)
+    back = grad_compress.decompress(q, scale)
+    err = np.abs(np.asarray(back - g)).max()
+    assert err <= float(scale) * 0.5 + 1e-9  # half-ULP of the quant grid
+
+
+def test_error_feedback_unbiased():
+    """With error feedback, the running sum of decompressed grads tracks
+    the true sum (bias -> 0)."""
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros(64)
+    tot_true = np.zeros(64)
+    tot_sent = np.zeros(64)
+    for _ in range(200):
+        g = jnp.asarray(rng.standard_normal(64))
+        q, s, residual = grad_compress.compress_with_feedback(g, residual)
+        tot_true += np.asarray(g)
+        tot_sent += np.asarray(grad_compress.decompress(q, s))
+    drift = np.abs(tot_sent - tot_true).max()
+    assert drift < 0.2  # bounded by one quantisation step
+
+
+def test_topk_roundtrip():
+    g = jnp.asarray(np.random.default_rng(1).standard_normal((8, 8)))
+    vals, idx = grad_compress.topk_compress(g, frac=0.25)
+    back = grad_compress.topk_decompress(vals, idx, g.shape)
+    kept = np.asarray(back) != 0
+    assert kept.sum() == 16
+    np.testing.assert_allclose(np.asarray(back)[kept],
+                               np.asarray(g)[kept], rtol=1e-6)
+
+
+# --- fault tolerance --------------------------------------------------------
+
+
+def test_health_tracker():
+    h = fault.HealthTracker(4, timeout_s=10)
+    for host in range(4):
+        h.heartbeat(host, now=100.0)
+    h.heartbeat(2, now=150.0)
+    assert h.failed_hosts(now=155.0) == [0, 1, 3]
+    assert h.healthy_hosts(now=105.0) == [0, 1, 2, 3]
+
+
+def test_plan_remesh():
+    assert fault.plan_remesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    shape, axes = fault.plan_remesh(504)
+    assert shape[-1] == 16 and np.prod(shape) <= 504
+    with pytest.raises(ValueError):
+        fault.plan_remesh(8, model_parallel=16)
+
+
+def test_straggler_watchdog():
+    w = fault.StragglerWatchdog(n_hosts=2, warmup=4)
+    flagged = False
+    for i in range(30):
+        w.observe(0, 0.10)
+        flagged |= w.observe(1, 0.10 if i < 20 else 0.50)
+    assert flagged
