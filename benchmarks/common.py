@@ -14,13 +14,25 @@ DUR = 30.0  # seconds of simulated time per run (fast mode)
 
 def run_sim(kind: str, n_fns: int, policy: str, *, duration=DUR, seed=1,
             depth=2.0, burst_us=120.0, window=1000, static_rt=None,
-            exec_s=0.1):
+            exec_s=0.1, record_dir=None):
     wl = make_workload(kind, n_fns, duration_s=duration, n_cores=N_CORES,
                        seed=seed, exec_s=exec_s)
     pol = make_policy(policy, credit_window=window) if policy != "lags-static" \
         else make_policy(policy, static_rt_fns=static_rt)
     cfg = SimConfig(n_cores=N_CORES, hierarchy_depth=depth, burst_us=burst_us)
-    return simulate(wl, pol, cfg)
+    r = simulate(wl, pol, cfg)
+    if record_dir:
+        from repro.obs.recorder import record_run
+
+        record_run(
+            record_dir,
+            meta={"layer": "simkernel", "kind": kind, "n_fns": n_fns,
+                  "policy": policy, "duration_s": duration, "seed": seed,
+                  "depth": depth, "burst_us": burst_us},
+            sched=r.sched_summary(),
+            include_registry=False,
+        )
+    return r
 
 
 @contextmanager

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + a short end-to-end observability smoke run.
+#
+#   scripts/check.sh            # from the repo root
+#
+# The smoke run drives launch/serve.py for 2 simulated seconds with tracing
+# enabled, then renders the run record with the report CLI — exercising the
+# whole obs path (metrics registry, schedstats, tracer, recorder, report).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+
+echo "== tier-1 test suite =="
+python -m pytest -q
+
+echo
+echo "== obs smoke: 2 s serve run with tracing =="
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+python -m repro.launch.serve --policy lags --tenants 8 --duration 2 \
+    --obs-dir "$tmp/lags" --trace
+python -m repro.obs.report "$tmp/lags"
+python - "$tmp/lags/trace.json" <<'PY'
+import json, sys
+obj = json.load(open(sys.argv[1]))
+assert obj["traceEvents"], "empty trace"
+print(f"trace OK: {len(obj['traceEvents'])} events")
+PY
+
+echo
+echo "check.sh: all good"

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import load_credit as lc
 from repro.core.policies import Policy
+from repro.obs.schedstats import SchedStats
 
 TICK = lc.TICK_SEC
 
@@ -35,6 +36,7 @@ class Request:
     demand: float
     remaining: float
     completion: float = -1.0
+    first_run: float = -1.0
 
 
 class EventSim:
@@ -53,11 +55,19 @@ class EventSim:
         self.now = 0.0
         self._seq = 0
         self.events: list = []
-        self.switches = 0
+        # schedstats-backed accounting (order switches, run delay, useful
+        # seconds per function); the DES models switch cost as zero — it is
+        # the ORDER oracle — so switch_s stays 0 here by design.
+        self.sched = SchedStats("des")
+
+    @property
+    def switches(self) -> int:
+        return int(self.sched.switches)
 
     def submit(self, fn: int, t: float, demand: float):
         i = len(self.requests)
         self.requests.append(Request(fn, t, demand, demand))
+        self.sched.account_arrival(fn)
         self._push(t, "arrive", (i,))
 
     def _push(self, t, kind, payload=()):
@@ -89,8 +99,15 @@ class EventSim:
         free = [c for c in range(self.n_cores) if c not in used_cores]
         for c, i in zip(free, chosen):
             self.running[c] = i
+            r = self.requests[i]
             if prev.get(c) != i:
-                self.switches += 1
+                same = prev.get(c) is not None and \
+                    self.requests[prev[c]].fn == r.fn
+                self.sched.account_switch(r.fn, 0.0, same_group=same)
+            if r.first_run < 0:
+                r.first_run = self.now
+                self.sched.account_run_delay(r.fn, self.now - r.arrival)
+        self.sched.sample_runq(self.now, len(self.runnable))
 
     def _advance(self, dt: float):
         if dt <= 0:
@@ -99,6 +116,7 @@ class EventSim:
             r = self.requests[i]
             r.remaining -= dt
             self.fn_vrt[r.fn] += dt
+            self.sched.account_useful(r.fn, dt)
         frac = np.zeros(self.n_fns)
         for c, i in self.running.items():
             frac[self.requests[i].fn] += 1.0
@@ -130,6 +148,7 @@ class EventSim:
                 r = self.requests[who]
                 r.remaining = 0.0
                 r.completion = self.now
+                self.sched.account_completion(r.fn, self.now - r.arrival)
                 self.runnable.discard(who)
                 self._reschedule()
             self._advance(ev.time - self.now)
@@ -147,6 +166,11 @@ class EventSim:
                 self._push(
                     self.now + self.policy.slice_ticks * TICK, "quantum"
                 )
+        self.sched.account_time(self.now - self.sched.time_s)
+        self.sched.capacity_s = self.n_cores * self.now
+        self.sched.idle_s = max(
+            self.sched.capacity_s - self.sched.useful_s, 0.0
+        )
         lat = np.asarray(
             [r.completion - r.arrival for r in self.requests if r.completion >= 0]
         )

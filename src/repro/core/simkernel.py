@@ -21,6 +21,8 @@ import numpy as np
 from repro.core import load_credit as lc
 from repro.core.policies import Policy
 from repro.core.switch_cost import switch_cost_us
+from repro.obs import metrics as obs_metrics
+from repro.obs.schedstats import EntityStats, SchedStats
 
 TICK_SEC = lc.TICK_SEC
 
@@ -65,6 +67,9 @@ class SimResult:
     busy_time_s: float  # useful work
     duration_s: float
     n_cores: int
+    # rich per-fn schedstats (populated only when repro.obs is enabled, so
+    # the disabled-telemetry hot path stays unchanged)
+    schedstats: Optional[SchedStats] = None
 
     @property
     def overhead_frac(self) -> float:
@@ -90,6 +95,15 @@ class SimResult:
 
     def pct(self, q: float) -> float:
         return float(np.percentile(self.latencies, q)) if len(self.latencies) else float("nan")
+
+    def sched_summary(self) -> SchedStats:
+        """The attached rich schedstats, or a totals-only one derived from
+        this result (always available, telemetry on or off)."""
+        if self.schedstats is not None:
+            return self.schedstats
+        from repro.obs.schedstats import from_sim_result
+
+        return from_sim_result(self)
 
 
 class _State:
@@ -160,6 +174,18 @@ def simulate(
         np.concatenate(wl.service_s).mean() if wl.closed_loop_slots else 0.1
     )
 
+    # obs instrumentation (per-fn schedstats, switch-cost histogram, runq
+    # timeline, run delay).  All per-tick recording is gated on ``obs_on``
+    # captured once here, so disabled telemetry adds no hot-loop work.
+    obs_on = obs_metrics.enabled()
+    sched: Optional[SchedStats] = None
+    if obs_on:
+        sched = SchedStats(f"simkernel.{policy.name}")
+        fn_busy = np.zeros(wl.n_fns)
+        fn_switches = np.zeros(wl.n_fns)
+        fn_switch_time = np.zeros(wl.n_fns)
+        th_wait_start = np.full(wl.n_fns * wl.threads_per_fn, -1.0)
+
     def submit(f: int, t_a: float, demand: float) -> None:
         nonlocal n_arrived
         rid = len(req_arrival)
@@ -175,6 +201,8 @@ def simulate(
                 st.th_state[th] = 1
                 st.th_rem[th] = per
                 st.th_req[th] = rid
+                if obs_on:
+                    th_wait_start[th] = t_a  # runnable from arrival
                 # CFS wakeup placement: a waking group's vruntime is clamped
                 # to (min runnable group vrt - sched_latency) so long-idle
                 # groups run soon but cannot monopolise with ancient lag.
@@ -242,6 +270,12 @@ def simulate(
                     st.core_thread[c] = th
                     st.core_slice[c] = policy.slice_ticks
                     st.th_last_run[th] = st.now
+                    if obs_on and th_wait_start[th] >= 0:
+                        sched.account_run_delay(
+                            int(st.th_fn[th]),
+                            max(st.now - th_wait_start[th], 0.0),
+                        )
+                        th_wait_start[th] = -1.0
 
         # 4. progress running threads, charge switch costs
         running = st.core_thread >= 0
@@ -271,6 +305,11 @@ def simulate(
             eff[changed] -= cost_s
             switches += int(changed.sum())
             switch_time += float(cost_s.sum())
+            if obs_on:
+                ch_fn = new_fn[changed]
+                np.add.at(fn_switches, ch_fn, 1.0)
+                np.add.at(fn_switch_time, ch_fn, cost_s)
+                sched.switch_cost_us.record_many(cost_s * 1e6)
         st._prev_assign = st.core_thread.copy()
         st._prev_fn = np.where(
             running, st.th_fn[np.maximum(st.core_thread, 0)], -1
@@ -334,11 +373,22 @@ def simulate(
             eff[running] = e - v_ovh
             switches += int(np.round(n_sw.sum()))
             switch_time += float(v_ovh.sum())
+            if obs_on:
+                np.add.at(fn_switches, run_fn, n_sw)
+                np.add.at(fn_switch_time, run_fn, v_ovh)
+                # per-switch cost, weighted by this core's switch count
+                for i in np.where(n_sw > 0)[0]:
+                    sched.switch_cost_us.record(
+                        1e6 * v_ovh[i] / n_sw[i], weight=float(n_sw[i])
+                    )
 
         run_th = st.core_thread[running]
         eff_run = eff[running]
         work = np.minimum(st.th_rem[run_th], eff_run)
         busy_time += float(work.sum())
+        if obs_on:
+            np.add.at(fn_busy, st.th_fn[run_th], work)
+            sched.sample_runq(st.now, n_runnable)
         st.th_rem[run_th] -= eff_run
         st.th_vrt[run_th] += eff_run
         np.add.at(st.fn_vrt, st.th_fn[run_th], eff_run)
@@ -366,6 +416,8 @@ def simulate(
                 st.th_rem[th] = per
                 st.th_req[th] = rid2
                 st.th_vrt[th] = max(st.th_vrt[th], st.fn_vrt[f])
+                if obs_on:
+                    th_wait_start[th] = st.now  # runnable from slot pickup
             else:
                 free_threads[f].append(th)
 
@@ -376,6 +428,30 @@ def simulate(
 
     done_idx = [i for i, l in enumerate(req_latency) if l >= 0.0]
     lat = np.asarray([req_latency[i] for i in done_idx])
+    if obs_on:
+        sched.time_s = wl.duration_s
+        sched.capacity_s = C * wl.duration_s
+        sched.useful_s = busy_time
+        sched.switch_s = switch_time
+        sched.switches = float(switches)
+        sched.idle_s = max(sched.capacity_s - busy_time - switch_time, 0.0)
+        sched.latency.record_many(lat)
+        arrived_per_fn = np.bincount(
+            np.asarray(req_fn, np.int64), minlength=wl.n_fns
+        ) if req_fn else np.zeros(wl.n_fns, np.int64)
+        done_per_fn = np.bincount(
+            np.asarray([req_fn[i] for i in done_idx], np.int64),
+            minlength=wl.n_fns,
+        ) if done_idx else np.zeros(wl.n_fns, np.int64)
+        for f in range(wl.n_fns):
+            e = sched.entities.get(f)
+            if e is None:
+                e = sched.entities[f] = EntityStats()
+            e.useful_s = float(fn_busy[f])
+            e.switch_s = float(fn_switch_time[f])
+            e.switches = float(fn_switches[f])
+            e.arrived = int(arrived_per_fn[f])
+            e.completed = int(done_per_fn[f])
     return SimResult(
         policy=policy.name,
         latencies=lat,
@@ -388,4 +464,5 @@ def simulate(
         busy_time_s=busy_time,
         duration_s=wl.duration_s,
         n_cores=C,
+        schedstats=sched,
     )

@@ -1,0 +1,38 @@
+"""Version-compat shims for JAX distributed APIs.
+
+``shard_map`` has moved twice across jax versions (``jax.experimental.
+shard_map`` -> top-level ``jax.shard_map``) and renamed its replication-
+check kwarg (``check_rep`` -> ``check_vma``).  Import it from here so call
+sites and tests are pinned to one spelling regardless of the installed jax:
+
+    from repro.distributed.compat import shard_map
+"""
+from __future__ import annotations
+
+import inspect
+
+_shard_map = None
+_params = None
+
+
+def _resolve():
+    global _shard_map, _params
+    if _shard_map is None:
+        import jax
+
+        fn = getattr(jax, "shard_map", None)
+        if fn is None:  # jax <= 0.5.x
+            from jax.experimental.shard_map import shard_map as fn
+        _shard_map = fn
+        _params = frozenset(inspect.signature(fn).parameters)
+    return _shard_map
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+    """Call the installed jax's shard_map, translating the replication-check
+    kwarg (``check_vma``/``check_rep``) to whichever this version accepts."""
+    fn = _resolve()
+    for ours, theirs in (("check_vma", "check_rep"), ("check_rep", "check_vma")):
+        if ours in kwargs and ours not in _params:
+            kwargs[theirs] = kwargs.pop(ours)
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

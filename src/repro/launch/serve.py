@@ -6,6 +6,14 @@
 ``--real-model`` attaches a reduced decoder so every engine step also runs a
 jitted decode over the shared KV cache (proving the engine drives real
 compute); without it the calibrated step-cost model is used (fast sweeps).
+
+Telemetry: ``--obs-dir DIR`` records the run (schedstats + metrics) as a
+diffable run record; ``--trace`` additionally captures a Chrome trace-event
+file (open in Perfetto).  Compare policies with
+
+  python -m repro.launch.serve --policy lags --obs-dir /tmp/r/lags
+  python -m repro.launch.serve --policy fair --obs-dir /tmp/r/fair
+  python -m repro.obs.report --diff /tmp/r/fair /tmp/r/lags
 """
 from __future__ import annotations
 
@@ -13,7 +21,10 @@ import argparse
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.traces import _mmpp_arrivals
+from repro.obs import report as obs_report
+from repro.obs.recorder import record_run
 from repro.scheduler.tenant import Request, Tenant
 from repro.serving.engine import Engine, EngineConfig
 
@@ -40,14 +51,30 @@ def build_workload(n_tenants: int, duration: float, seed: int = 0):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="lags", choices=["lags", "fair", "fifo"])
-    ap.add_argument("--tenants", type=int, default=40)
+    ap.add_argument("--tenants", type=int, default=48)
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--max-resident", type=int, default=12,
+                    help="tenants whose weights fit in HBM (residency LRU)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real-model", action="store_true")
+    ap.add_argument("--obs-dir", default="",
+                    help="record schedstats/metrics run record here")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a Chrome trace (needs --obs-dir to persist)")
     args = ap.parse_args(argv)
 
-    tenants, arrivals = build_workload(args.tenants, args.duration)
-    eng = Engine(EngineConfig(policy=args.policy, n_slots=args.slots), tenants)
+    if args.obs_dir or args.trace:
+        obs.enable()
+    if args.trace:
+        obs.install_tracer()
+
+    tenants, arrivals = build_workload(args.tenants, args.duration, args.seed)
+    eng = Engine(
+        EngineConfig(policy=args.policy, n_slots=args.slots,
+                     max_resident=args.max_resident),
+        tenants,
+    )
     if args.real_model:
         import jax
 
@@ -67,6 +94,20 @@ def main(argv=None):
         f"switch_overhead={st.overhead_frac*100:.1f}% "
         f"membership_changes={st.membership_changes}"
     )
+    if args.obs_dir:
+        path = record_run(
+            args.obs_dir,
+            meta={
+                "layer": "serving", "policy": args.policy,
+                "tenants": args.tenants, "duration_s": args.duration,
+                "slots": args.slots, "seed": args.seed,
+                "arrivals": len(arrivals),
+            },
+            sched=st.sched,
+        )
+        print(f"run record -> {path}")
+        print(obs_report.summarize({"meta": {"policy": args.policy},
+                                    "sched": st.sched}))
     return st
 
 

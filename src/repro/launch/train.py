@@ -40,7 +40,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--simulate-failure", type=int, default=-1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--obs-dir", default="",
+                    help="record step-time metrics (and trace) run record")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture per-step Chrome trace events")
     args = ap.parse_args(argv)
+
+    if args.obs_dir or args.trace:
+        import repro.obs as obs
+
+        obs.enable()
+        if args.trace:
+            obs.install_tracer()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -51,6 +62,9 @@ def main(argv=None) -> dict:
         opt=OptConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps),
     )
     step_fn = jax.jit(train_loop.make_train_step(cfg, tc), donate_argnums=0)
+    step_fn = train_loop.instrument_step(
+        step_fn, tokens_per_step=args.batch * args.seq * max(args.accum, 1)
+    )
     stream = TokenStream(cfg, args.batch, args.seq, DataConfig())
 
     start = 0
@@ -79,6 +93,17 @@ def main(argv=None) -> dict:
         if args.simulate_failure == step:
             print("simulating hard failure", file=sys.stderr)
             os._exit(17)
+    if args.obs_dir:
+        from repro.obs.recorder import record_run
+
+        path = record_run(
+            args.obs_dir,
+            meta={
+                "layer": "train", "arch": args.arch, "steps": args.steps,
+                "batch": args.batch, "seq": args.seq, "accum": args.accum,
+            },
+        )
+        print(f"run record -> {path}")
     return {"losses": losses, "final_step": args.steps}
 
 

@@ -1,0 +1,152 @@
+"""Run summaries and run-vs-run diffs over recorded telemetry.
+
+  PYTHONPATH=src python -m repro.obs.report RUNDIR            # summarize
+  PYTHONPATH=src python -m repro.obs.report --diff A B        # compare runs
+  PYTHONPATH=src python -m repro.obs.report RUNDIR --top 5    # busiest tenants
+
+The diff is the paper's evaluation loop in one command: record a lags run
+and a fair run of ``launch/serve.py`` (``--obs-dir``), then diff them to get
+per-policy switch-time share, switch rate/cost, and latency-tail deltas.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.obs.recorder import load_run
+from repro.obs.schedstats import SchedStats
+
+
+def _fmt(v: Optional[float], unit: str = "") -> str:
+    if v is None or v != v:  # NaN
+        return "-"
+    if unit == "%":
+        return f"{100.0 * v:.2f}%"
+    if unit == "us":
+        return f"{v:.1f}us"
+    if unit == "s":
+        return f"{v:.3f}s"
+    return f"{v:.3f}"
+
+
+def _table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "  ".join(c.ljust(w) for c, w in zip(cells, widths)).rstrip()
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])
+
+
+def _key_rows(sched: SchedStats) -> List[tuple]:
+    lat, rdel = sched.latency, sched.run_delay
+    return [
+        ("time_s", sched.time_s, "s"),
+        ("useful_s", sched.useful_s, "s"),
+        ("switch_s", sched.switch_s, "s"),
+        ("switch_share", sched.switch_share, "%"),
+        ("switches", sched.switches, ""),
+        ("switch_rate_hz", sched.switch_rate(), ""),
+        ("mean_switch_cost", 1e-6 * sched.mean_switch_cost_us, "s"),
+        ("p99_switch_cost", 1e-6 * sched.switch_cost_us.pct(99), "s"),
+        ("p50_latency", lat.pct(50), "s"),
+        ("p95_latency", lat.pct(95), "s"),
+        ("p99_latency", lat.pct(99), "s"),
+        ("completed", lat.count, ""),
+        ("p95_run_delay", rdel.pct(95), "s"),
+        ("runq_peak", sched.runq_peak(), ""),
+    ]
+
+
+def summarize(run: dict, top: int = 0) -> str:
+    meta = run.get("meta", {})
+    sched: Optional[SchedStats] = run.get("sched")
+    head = " ".join(f"{k}={v}" for k, v in sorted(meta.items()))
+    out = [f"run: {head}" if head else "run: (no meta)"]
+    if sched is None:
+        out.append("(no schedstats recorded)")
+        return "\n".join(out)
+    rows = [[name, _fmt(val, unit)] for name, val, unit in _key_rows(sched)]
+    out.append(_table(["metric", "value"], rows))
+    if top > 0 and sched.entities:
+        ents = sorted(sched.entities.items(),
+                      key=lambda kv: kv[1].useful_s, reverse=True)[:top]
+        erows = [
+            [str(tid), _fmt(e.useful_s, "s"), _fmt(e.switch_s, "s"),
+             _fmt(e.switches), _fmt(e.run_delay_s, "s"),
+             f"{e.completed}/{e.arrived}" if e.arrived else str(e.completed)]
+            for tid, e in ents
+        ]
+        out.append("")
+        out.append(f"top {len(ents)} entities by useful_s:")
+        out.append(_table(
+            ["entity", "useful_s", "switch_s", "switches", "run_delay_s",
+             "done"], erows))
+    return "\n".join(out)
+
+
+def diff(run_a: dict, run_b: dict) -> str:
+    """Side-by-side comparison; delta column is B - A (negative = B lower)."""
+    sa, sb = run_a.get("sched"), run_b.get("sched")
+    if sa is None or sb is None:
+        return "diff requires schedstats in both runs"
+    la = str(run_a.get("meta", {}).get("policy", "A"))
+    lb = str(run_b.get("meta", {}).get("policy", "B"))
+    if la == lb:
+        la, lb = f"{la}(A)", f"{lb}(B)"
+    rows = []
+    for (name, va, unit), (_, vb, _) in zip(_key_rows(sa), _key_rows(sb)):
+        d = vb - va if va == va and vb == vb else float("nan")
+        rows.append([name, _fmt(va, unit), _fmt(vb, unit), _fmt(d, unit)])
+    out = [
+        f"diff: {la} -> {lb}",
+        _table(["metric", la, lb, f"delta({lb}-{la})"], rows),
+    ]
+    if sa.switch_share == sa.switch_share and sb.switch_share == sb.switch_share:
+        lo = la if sa.switch_share <= sb.switch_share else lb
+        out.append(f"lower switch-time share: {lo}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> str:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize or diff recorded obs runs.",
+    )
+    ap.add_argument("runs", nargs="*", help="run dir(s) or run.json path(s)")
+    ap.add_argument("--diff", action="store_true",
+                    help="compare exactly two runs (delta = second - first)")
+    ap.add_argument("--top", type=int, default=0,
+                    help="also list the N busiest entities (summary mode)")
+    args = ap.parse_args(argv)
+
+    def _load(path):
+        try:
+            return load_run(path)
+        except FileNotFoundError:
+            ap.error(f"no run record at {path!r} (expected a dir with "
+                     f"run.json, or a run.json path)")
+        except (OSError, ValueError) as e:
+            ap.error(f"could not read run record {path!r}: {e}")
+
+    if args.diff:
+        if len(args.runs) != 2:
+            ap.error("--diff takes exactly two run paths")
+        text = diff(_load(args.runs[0]), _load(args.runs[1]))
+    else:
+        if not args.runs:
+            ap.error("give at least one run path")
+        text = "\n\n".join(
+            summarize(_load(p), top=args.top) for p in args.runs
+        )
+    try:
+        print(text)
+    except BrokenPipeError:  # e.g. `report ... | head`
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    return text
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+from repro.obs import metrics as obs_metrics
 from repro.scheduler.tenant import Request, Tenant
 
 
@@ -36,6 +37,7 @@ def pick_admissions(
         for r in reqs[:free_slots]:
             tenants[r.tenant].queue.popleft()
             out.append(r)
+        obs_metrics.counter(f"admission.{policy}.admitted").inc(len(out))
         return out
 
     if policy == "fair":
@@ -65,6 +67,7 @@ def pick_admissions(
                     progressed = True
             if not progressed:
                 break
+    obs_metrics.counter(f"admission.{policy}.admitted").inc(len(out))
     return out
 
 
@@ -84,5 +87,6 @@ def should_preempt(
     )
     # hysteresis: evict only on a clear credit gap, else run-to-completion
     if lightest_wait.credit < 0.5 * heaviest_run.credit - 1e-12:
+        obs_metrics.counter("admission.lags.preemptions").inc()
         return True, heaviest_run.tid
     return False, -1

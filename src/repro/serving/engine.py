@@ -17,11 +17,14 @@ Two execution backends:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.obs.schedstats import SchedStats
 from repro.scheduler.admission import pick_admissions, should_preempt
 from repro.scheduler.tenant import Request, Tenant
 from repro.serving.kvcache import PagedAllocator
@@ -42,14 +45,32 @@ class EngineConfig:
     credit_window: int = 256
 
 
-@dataclass
 class EngineStats:
-    time_s: float = 0.0
-    useful_s: float = 0.0
-    switch_s: float = 0.0
-    membership_changes: int = 0
-    steps: int = 0
-    completed: List[Request] = field(default_factory=list)
+    """Engine accounting, backed by ``repro.obs.schedstats.SchedStats``.
+
+    The old ad-hoc fields survive as views onto the schedstats so existing
+    callers (benchmarks, examples) keep working; the full per-tenant
+    breakdown, latency/run-delay histograms and run-queue timeline live on
+    ``.sched`` and are what ``repro.obs.report`` consumes.
+    """
+
+    def __init__(self):
+        self.sched = SchedStats("engine")
+        self.time_s = 0.0
+        self.steps = 0
+        self.completed: List[Request] = []
+
+    @property
+    def useful_s(self) -> float:
+        return self.sched.useful_s
+
+    @property
+    def switch_s(self) -> float:
+        return self.sched.switch_s
+
+    @property
+    def membership_changes(self) -> int:
+        return int(self.sched.switches)
 
     @property
     def overhead_frac(self) -> float:
@@ -90,6 +111,7 @@ class Engine:
 
     def submit(self, req: Request):
         self.tenants[req.tenant].queue.append(req)
+        self.stats.sched.account_arrival(req.tenant)
 
     # -- one engine step --------------------------------------------------
     def step(self):
@@ -102,6 +124,7 @@ class Engine:
             if r.done:
                 r.finish_time = st.time_s
                 st.completed.append(r)
+                st.sched.account_completion(r.tenant, r.latency)
                 self.alloc.free(r.rid)
             else:
                 still.append(r)
@@ -134,13 +157,22 @@ class Engine:
                     break
             if r.start_time < 0:
                 r.start_time = st.time_s
+                # schedstat run delay: queued (runnable) -> first admission
+                st.sched.account_run_delay(
+                    r.tenant, max(st.time_s - r.arrival, 0.0)
+                )
             prefill_toks += 0 if r.prefilled else r.prompt_len
             r.prefilled = True
             self.tenants[r.tenant].last_admit = st.time_s
             self.running.append(r)
 
+        st.sched.sample_runq(
+            st.time_s, sum(len(t.queue) for t in self.tenants.values())
+        )
         if not self.running:
             st.time_s += cfg.base_step_s  # idle tick
+            st.sched.account_time(cfg.base_step_s)
+            st.sched.account_idle(cfg.base_step_s)
             st.steps += 1
             return
 
@@ -153,11 +185,13 @@ class Engine:
         switch_s = 0.0
         if change:
             swap_mb = 0.0
+            swapped: set = set()
             for t in members - self._prev_members:
                 if t in self._resident:
                     self._resident.remove(t)  # refresh LRU position
                 else:
                     swap_mb += self.tenants[t].weight_mb
+                    swapped.add(t)
                 self._resident.append(t)
             while len(self._resident) > cfg.max_resident:
                 victim_t = next(
@@ -170,7 +204,14 @@ class Engine:
                 cfg.swap_s_per_mb * swap_mb
                 + cfg.dispatch_s_per_member_change * len(change)
             )
-            st.membership_changes += len(change)
+            # schedstat switch accounting: one "context switch" per changed
+            # member; a residency hit is the cheap same-group analogue
+            per_change = switch_s / len(change)
+            for t in change:
+                st.sched.account_switch(
+                    t, per_change, same_group=t not in swapped
+                )
+            obs_metrics.counter("engine.membership_changes").inc(len(change))
         self._prev_members = members
 
         # step time: decode for the batch + chunked prefill work
@@ -181,9 +222,16 @@ class Engine:
 
         step_s = compute_s + switch_s
         st.time_s += step_s
-        st.useful_s += compute_s
-        st.switch_s += switch_s
+        st.sched.account_time(step_s)
         st.steps += 1
+        if obs_tracing.active():
+            # trace on the sim clock: one complete event per engine step
+            obs_tracing.tracer().emit(
+                "engine.step", "engine", (st.time_s - step_s) * 1e6,
+                step_s * 1e6,
+                {"batch": len(self.running), "switch_ms": switch_s * 1e3,
+                 "prefill_toks": prefill_toks},
+            )
 
         # progress: one token per running request
         service_per_req = compute_s / max(len(self.running), 1)
@@ -191,6 +239,8 @@ class Engine:
         for r in self.running:
             r.generated += 1
             served[r.tenant] = served.get(r.tenant, 0.0) + service_per_req
+        for tid, s in served.items():
+            st.sched.account_useful(tid, s)
         for tid, t in self.tenants.items():
             t.tick(served.get(tid, 0.0), step_s, cfg.credit_window)
 

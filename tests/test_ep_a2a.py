@@ -64,9 +64,9 @@ def test_shard_map_single_device():
     """all_to_all path under shard_map on a 1-device 'model' axis equals the
     local path (exercises the collective wiring)."""
     from jax.sharding import Mesh
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.compat import shard_map
     from repro.distributed.ep_a2a import moe_ep_a2a_local
 
     rng = np.random.default_rng(2)
