@@ -35,6 +35,32 @@ def run_sim(kind: str, n_fns: int, policy: str, *, duration=DUR, seed=1,
     return r
 
 
+def run_sim_jax(kind: str, n_fns: int, policy: str, *, duration=DUR, seed=1,
+                depth=2.0, burst_us=120.0, window=1000, static_rt=None,
+                exec_s=0.1, threads_per_fn=4, n_cores=N_CORES):
+    """Same sweep on the ``lax.scan`` backend (any registered policy).
+
+    Returns ``(latencies, outputs)``; policy names resolve through
+    ``repro.sched.jax_backend.CODE_OF``, so every protocol policy — not
+    just cfs/lags — runs under one jitted scan body.
+    """
+    from repro.core import simkernel_jax as sj
+    from repro.sched.jax_backend import CODE_OF
+
+    wl = make_workload(kind, n_fns, duration_s=duration, n_cores=n_cores,
+                       seed=seed, exec_s=exec_s, threads_per_fn=threads_per_fn)
+    trace = sj.build_slot_trace(wl, n_fns, threads_per_fn)
+    p = sj.SimParams(
+        n_cores=n_cores, n_fns=n_fns, n_ticks=int(duration / sj.TICK),
+        policy=CODE_OF[policy], burst_us=burst_us, depth=depth,
+        window_ticks=window,
+        rt_fns=() if static_rt is None
+        else tuple(int(f) for f in static_rt),
+    )
+    out = sj.simulate(trace, p)
+    return sj.latencies_from(trace, out["done_tick"]), out
+
+
 @contextmanager
 def timed(rows: list, name: str, derived: str = ""):
     t0 = time.time()

@@ -3,15 +3,25 @@
 120 functions of identical work under resctl / resctl-parallel / resctl-mix,
 comparing CFS, tuned CFS (100 ms slice), SCHED_RR, EEVDF, tuned EEVDF and
 CFS-LAGS, plus the 12-function uncontended reference.
+
+The second block repeats the sweep on the JAX ``lax.scan`` backend
+(``--jax`` rows): every protocol policy kind — including SCHED_RR, EEVDF
+and CFS-LAGS-static — now runs through ``repro.sched.jax_backend``
+under one jitted scan body, which is what the cluster study shards.
 """
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, run_sim
+import numpy as np
+
+from benchmarks.common import emit, run_sim, run_sim_jax
+from repro.core.traces import lightest_band_fns
 
 POLICIES = ("cfs", "cfs-tuned", "rr", "eevdf", "eevdf-tuned", "lags")
 KINDS = ("resctl", "resctl-parallel", "resctl-mix")
+# the five policy kinds on the JAX backend (tuned variants share kinds)
+JAX_POLICIES = ("cfs", "eevdf", "rr", "lags", "lags-static")
 
 
 def main() -> list:
@@ -33,6 +43,22 @@ def main() -> list:
                 f"p50={r.pct(50):.3f};p95={r.pct(95):.3f};"
                 f"thr_slo={r.throughput_slo():.1f}",
             ))
+    # JAX sweep on the open-loop trace (the scan backend replays recorded
+    # arrivals; closed-loop resctl load generation stays numpy-only)
+    static = lightest_band_fns(120, n_bands_low=3)
+    for pol in JAX_POLICIES:
+        t0 = time.time()
+        lat, _ = run_sim_jax(
+            "azure2021", 120, pol,
+            static_rt=static if pol == "lags-static" else None,
+        )
+        rows.append((
+            f"fig11.jax.120fn-{pol}",
+            (time.time() - t0) * 1e6,
+            f"p50={np.median(lat) if len(lat) else -1:.3f};"
+            f"p95={np.percentile(lat, 95) if len(lat) else -1:.3f};"
+            f"n={len(lat)}",
+        ))
     return rows
 
 

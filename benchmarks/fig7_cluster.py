@@ -39,6 +39,19 @@ def main() -> list:
             f"reduction={100*(1-n_lags/max(n_cfs,1)):.0f}%"
         ),
     ))
+    # cross-check on the lax.scan backend (jit per node count; the same
+    # SLO search runs backend-blind over SimResult)
+    t0 = time.time()
+    res_jax = consolidation_sweep(
+        total_fns=800, node_counts=(14, 12, 10), backend="jax"
+    )
+    us = (time.time() - t0) * 1e6
+    for r in res_jax:
+        rows.append((
+            f"fig7.jax.{r.policy}.n{r.n_nodes}",
+            us / len(res_jax),
+            f"p50={r.p50:.3f};p95={r.p95:.3f};ovh={r.overhead_frac*100:.1f}%",
+        ))
     return rows
 
 

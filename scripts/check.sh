@@ -15,6 +15,10 @@ echo "== tier-1 test suite =="
 python -m pytest -q
 
 echo
+echo "== obs-off regression gate: density-9 simkernel, telemetry disabled =="
+python scripts/obs_gate.py
+
+echo
 echo "== obs smoke: 2 s serve run with tracing =="
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT

@@ -1,0 +1,207 @@
+#!/usr/bin/env python
+"""Observability regression gate: telemetry off must stay free.
+
+Runs the density-9 simkernel workload (108 functions on 12 HT, the
+paper's peak-throughput density) with telemetry *disabled* and fails if
+it regresses >3% against the baseline pinned in
+``benchmarks/obs_gate_baseline.json``.
+
+Wall-clock alone is machine-dependent, so the gate times a fixed numpy
+calibration workload on the same machine and compares the *ratio*
+sim_time / calib_time against the stored ratio — both sides are
+numpy-bound, so the ratio transfers across hosts.  Both measurements
+take the best of several repetitions to shed scheduler noise.
+
+The baseline also pins a behavioral fingerprint (completions, switches,
+busy seconds) of the same seeded run: a fingerprint mismatch means the
+simulator's *behavior* changed, which is a different failure than a
+performance regression and is reported as such.
+
+Usage (from the repo root, PYTHONPATH=src):
+
+  python scripts/obs_gate.py            # check against the baseline
+  python scripts/obs_gate.py --update   # re-pin after an intended change
+
+``OBS_GATE_TOL`` overrides the relative tolerance (default 0.03).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), os.pardir,
+    "benchmarks", "obs_gate_baseline.json",
+)
+
+DENSITY = 9
+N_CORES = 12
+N_FNS = DENSITY * N_CORES
+DUR_S = 10.0  # simulated seconds
+SEED = 5
+REPS = 3  # interleaved sim/calib repetitions per measurement pass
+PASSES = 3  # ratio = median over passes (sheds per-pass noise)
+
+
+def _calib_once() -> float:
+    """CPU seconds for a fixed reference workload.
+
+    Deliberately matches the simkernel's instruction mix — a Python loop
+    over small-array key composition, top-k selection and scatter-adds —
+    rather than one large BLAS call, so the sim/calib ratio stays stable
+    under frequency scaling and cache pressure.
+    """
+    rng = np.random.default_rng(0)
+    n = N_FNS * 192  # entity count of the azure2021 density-9 workload,
+    # so the calibration's working set leaves cache and tracks the same
+    # memory-bandwidth sensitivity as the simulator
+    credit = rng.random(N_FNS)
+    rank = rng.random(n)
+    grp = rng.integers(0, N_FNS, n)
+    t0 = time.process_time()
+    for _ in range(800):
+        keys = credit[grp] * 1e9 + rank
+        picked = np.argpartition(keys, N_CORES)[:N_CORES]
+        add = np.zeros(N_FNS)
+        np.add.at(add, grp[picked], 1.0)
+        credit = credit * 0.999 + add * 1e-4
+    return time.process_time() - t0
+
+
+def _sim_once():
+    from repro.core.policies import make_policy
+    from repro.core.simkernel import SimConfig, simulate
+    from repro.core.traces import make_workload
+
+    wl = make_workload("azure2021", N_FNS, duration_s=DUR_S,
+                       n_cores=N_CORES, seed=SEED)
+    t0 = time.process_time()
+    r = simulate(wl, make_policy("lags"), SimConfig(n_cores=N_CORES))
+    dt = time.process_time() - t0
+    fp = {
+        "n_completed": int(r.n_completed),
+        "switches": int(r.switches),
+        "busy_time_s": round(float(r.busy_time_s), 6),
+    }
+    return dt, fp
+
+
+def measure():
+    from repro.obs import metrics
+
+    if metrics.enabled():
+        print("obs_gate: telemetry is enabled; this gate times the "
+              "disabled path", file=sys.stderr)
+        sys.exit(2)
+    # CPU time (not wall) sheds other-process interference; interleaving
+    # sim and calibration reps makes frequency drift hit both sides alike
+    sim_best, calib_best, fp = float("inf"), float("inf"), None
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(REPS):
+            calib_best = min(calib_best, _calib_once())
+            dt, fp = _sim_once()
+            sim_best = min(sim_best, dt)
+            gc.collect()
+    finally:
+        gc.enable()
+    return {"sim_s": sim_best, "calib_s": calib_best,
+            "ratio": sim_best / calib_best, "fingerprint": fp}
+
+
+def measure_best():
+    """Minimum ratio over several passes, plus the observed noise spread.
+
+    Timing noise on a shared host only ever inflates a measurement, so
+    the minimum is the best estimator of the true cost — and a real
+    regression shifts the whole distribution, minimum included.  The
+    spread (max/min - 1 across passes, capped at 10%) is reported so the
+    gate can widen its tolerance by the noise it actually observed: on a
+    quiet machine the gate is a true 3% gate, on a contended one it does
+    not fail spuriously."""
+    runs = [measure() for _ in range(PASSES)]
+    ratios = sorted(m["ratio"] for m in runs)
+    best = min(runs, key=lambda m: m["ratio"])
+    best["noise"] = min(ratios[-1] / ratios[0] - 1.0, 0.10)
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin the baseline JSON from this machine")
+    args = ap.parse_args(argv)
+    tol = float(os.environ.get("OBS_GATE_TOL", "0.03"))
+
+    m = measure_best()
+    if args.update:
+        with open(BASELINE, "w") as f:
+            json.dump(
+                {
+                    "workload": {"kind": "azure2021", "n_fns": N_FNS,
+                                 "duration_s": DUR_S, "n_cores": N_CORES,
+                                 "seed": SEED, "policy": "lags"},
+                    "ratio": m["ratio"],
+                    "fingerprint": m["fingerprint"],
+                },
+                f, indent=2,
+            )
+            f.write("\n")
+        print(f"obs_gate: baseline updated (ratio={m['ratio']:.3f}, "
+              f"fingerprint={m['fingerprint']})")
+        return 0
+
+    try:
+        with open(BASELINE) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"obs_gate: no baseline at {BASELINE}; run with --update",
+              file=sys.stderr)
+        return 2
+
+    if m["fingerprint"] != base["fingerprint"]:
+        print(
+            "obs_gate: BEHAVIOR CHANGED — the seeded density-9 run no "
+            f"longer matches the pinned fingerprint\n"
+            f"  pinned:   {base['fingerprint']}\n"
+            f"  measured: {m['fingerprint']}\n"
+            "If intended, re-pin with: python scripts/obs_gate.py --update",
+            file=sys.stderr,
+        )
+        return 1
+
+    slack = m["ratio"] / base["ratio"] - 1.0
+    budget = tol + m["noise"]
+    if slack > budget:
+        # one retry before declaring a regression: a transient noisy-host
+        # pass should not fail the gate
+        m = measure_best()
+        slack = min(slack, m["ratio"] / base["ratio"] - 1.0)
+        budget = tol + m["noise"]
+    status = "OK" if slack <= budget else "REGRESSION"
+    print(
+        f"obs_gate: {status} sim={m['sim_s']*1e3:.0f}ms "
+        f"calib={m['calib_s']*1e3:.0f}ms ratio={m['ratio']:.3f} "
+        f"baseline={base['ratio']:.3f} delta={slack*100:+.1f}% "
+        f"(tol {tol*100:.0f}% + noise {m['noise']*100:.1f}%)"
+    )
+    if slack > budget:
+        print(
+            "obs_gate: the telemetry-disabled hot path got slower — the "
+            "obs layer must stay free when off (ROADMAP). If the change "
+            "is intended, re-pin with --update.",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,17 +56,77 @@ def simulate_node_share(
     )
 
 
+def simulate_node_share_jax(
+    policy_name: str,
+    total_fns: int,
+    n_nodes: int,
+    duration_s: float = 30.0,
+    n_cores: int = 12,
+    seed: int = 7,
+    threads_per_fn: int = 8,
+) -> SimResult:
+    """One representative node on the ``lax.scan`` backend.
+
+    Same share split as :func:`simulate_node_share`, but through
+    ``repro.core.simkernel_jax`` — any registered policy, jit-compiled,
+    ``vmap``-able across the (n_nodes, policy) grid on an accelerator.
+    Returned as a :class:`SimResult` so the SLO search is backend-blind
+    (the scan backend folds switch time into ``overhead_s``; discrete
+    switch counts stay numpy-only).
+    """
+    from repro.core import simkernel_jax as sj
+    from repro.sched.jax_backend import CODE_OF
+
+    fns_per_node = max(1, total_fns // n_nodes)
+    wl = make_workload(
+        "azure2021", fns_per_node, duration_s=duration_s, n_cores=n_cores,
+        seed=seed, exec_s=0.2, threads_per_fn=threads_per_fn,
+    )
+    trace = sj.build_slot_trace(wl, fns_per_node, threads_per_fn)
+    p = sj.SimParams(
+        n_cores=n_cores, n_fns=fns_per_node,
+        n_ticks=int(duration_s / sj.TICK), policy=CODE_OF[policy_name],
+        burst_us=280.0, depth=5.0,
+    )
+    out = sj.simulate(trace, p)
+    lat = sj.latencies_from(trace, out["done_tick"])
+    at = np.asarray(trace.arrival_tick)
+    dt = np.asarray(out["done_tick"])
+    ok = (dt >= 0) & (at < np.iinfo(np.int32).max // 2)
+    fn_of = np.broadcast_to(
+        np.asarray(trace.slot_fn)[:, None], at.shape
+    )[ok]
+    n_arrived = int((at < np.iinfo(np.int32).max // 2).sum())
+    return SimResult(
+        policy=policy_name,
+        latencies=lat,
+        fn_of=fn_of,
+        arrival_of=at[ok] * sj.TICK,
+        n_arrived=n_arrived,
+        n_completed=len(lat),
+        switches=0,
+        switch_time_s=float(out["overhead_s"]),
+        busy_time_s=float(out["busy_s"]),
+        duration_s=duration_s,
+        n_cores=n_cores,
+    )
+
+
 def consolidation_sweep(
     total_fns: int = 800,
     node_counts=(15, 14, 12, 11, 10, 9, 8),
     policies=("cfs", "lags"),
     duration_s: float = 30.0,
     slo_s: float = 1.0,
+    backend: str = "numpy",
 ) -> List[ClusterResult]:
+    node_share = (
+        simulate_node_share if backend == "numpy" else simulate_node_share_jax
+    )
     out = []
     for pol in policies:
         for n in node_counts:
-            r = simulate_node_share(pol, total_fns, n, duration_s)
+            r = node_share(pol, total_fns, n, duration_s)
             out.append(
                 ClusterResult(
                     policy=pol,

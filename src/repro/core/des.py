@@ -15,8 +15,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import load_credit as lc
-from repro.core.policies import Policy
 from repro.obs.schedstats import SchedStats
+from repro.sched import Policy
 
 TICK = lc.TICK_SEC
 
@@ -77,11 +77,9 @@ class EventSim:
     # --- policy keys on request granularity -------------------------------
     def _key(self, i: int):
         r = self.requests[i]
-        if self.policy.lags:
-            return (self.tracker.credit[r.fn], r.arrival, i)
-        if self.policy.rr:
-            return (r.arrival, i)
-        return (self.fn_vrt[r.fn], r.arrival, i)
+        return self.policy.request_key(
+            self.tracker.credit, self.fn_vrt, r.fn, r.arrival, i
+        )
 
     def _reschedule(self):
         """Assign cores to the |cores| best runnable requests (preemptive)."""

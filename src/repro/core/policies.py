@@ -1,135 +1,21 @@
-"""Scheduling policies: CFS, EEVDF, SCHED_RR, CFS-LAGS, CFS-LAGS-static.
+"""Back-compat shim: the policy core moved to ``repro.sched``.
 
-Each policy supplies:
-  * ``keys(state)``      — per-thread priority key tuple (lexicographic, lower
-                           is first) used to fill free cores;
-  * ``slice_ticks``      — how long an assigned thread keeps its core;
-  * ``preempt(state)``   — cores to release early this tick (wakeup
-                           preemption / credit preemption / RT preemption).
-
-The simulator (``simkernel``) owns the state arrays; policies are pure key
-producers so the same logic drives the numpy engine, the lax.scan engine and
-the serving-engine admission scheduler.
+CFS, EEVDF, SCHED_RR, CFS-LAGS and CFS-LAGS-static are defined once in
+the unified scheduling package — ``repro.sched.protocol`` for the spec
+registry and shared preemption rule, ``repro.sched.numpy_backend`` for
+the float64 reference backend this module used to implement.  Import
+from ``repro.sched`` in new code; this module only preserves the old
+import path for existing consumers.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from repro.sched.numpy_backend import (  # noqa: F401
+    CFS_DEFAULT_SLICE_TICKS,
+    TUNED_SLICE_TICKS,
+    Policy,
+    make_policy,
+)
 
-import numpy as np
-
-# scheduler tick = 4 ms (CONFIG_HZ = 250)
-CFS_DEFAULT_SLICE_TICKS = 1  # min_granularity ~3 ms -> 1 tick under load
-TUNED_SLICE_TICKS = 25  # 100 ms (fig 11 "tuned" baselines / SCHED_RR quantum)
-
-
-@dataclass
-class Policy:
-    name: str = "cfs"
-    slice_ticks: int = CFS_DEFAULT_SLICE_TICKS
-    # LAGS
-    lags: bool = False
-    credit_window: int = 1000
-    # EEVDF
-    eevdf: bool = False
-    # RR (soft real-time round robin across all functions)
-    rr: bool = False
-    # LAGS-static: set of fn ids under SCHED_RR priority
-    static_rt_fns: Optional[np.ndarray] = None
-
-    def keys(self, st) -> np.ndarray:
-        """Return a (T,) float64 composite key; lower runs first.
-
-        Built as primary * 1e9 + secondary-rank so a single argsort suffices.
-        """
-        T = st.th_fn.shape[0]
-        # secondary: thread vruntime rank in [0, 1)
-        order = np.argsort(st.th_vrt, kind="stable")
-        rank = np.empty(T)
-        rank[order] = np.arange(T) / max(T, 1)
-
-        if self.static_rt_fns is not None:
-            is_rt = np.isin(st.th_fn, self.static_rt_fns)
-            # RT: FIFO by last-run (round robin); CFS others by (vrt_g, vrt_t)
-            base = np.where(is_rt, -1e12 + st.th_last_run, st.fn_vrt[st.th_fn] * 1e9)
-            return base + rank
-        if self.rr:
-            return st.th_last_run * 1e9 + rank
-        if self.lags:
-            return st.credit[st.th_fn] * 1e9 + rank
-        if self.eevdf:
-            # eligible (lag >= 0) first, then earliest virtual deadline
-            v = st.fn_vrt[st.th_fn]
-            vmean = (
-                np.mean(st.fn_vrt[np.unique(st.th_fn[st.runnable_mask()])])
-                if st.runnable_mask().any()
-                else 0.0
-            )
-            deadline = v + self.slice_ticks * st.tick_sec
-            inel = (v > vmean + 1e-12).astype(np.float64)
-            return inel * 1e15 + deadline * 1e9 + rank
-        # CFS: hierarchical (group vruntime, thread vruntime)
-        return st.fn_vrt[st.th_fn] * 1e9 + rank
-
-    def preempt_cores(self, st) -> np.ndarray:
-        """Indices of cores to release for a waiting lower-key thread."""
-        running = st.core_thread >= 0
-        if not running.any():
-            return np.empty(0, np.int64)
-        wait_mask = st.waiting_mask()
-        if not wait_mask.any():
-            return np.empty(0, np.int64)
-        if self.lags:
-            # paper §4.3 global path: a waking task of a lower-credit cgroup
-            # takes any core running a higher-credit task.
-            wait_credit = st.credit[st.th_fn[wait_mask]].min()
-            run_credit = np.where(
-                running, st.credit[st.th_fn[np.maximum(st.core_thread, 0)]], -np.inf
-            )
-            worst = int(np.argmax(run_credit))
-            if wait_credit + 1e-12 < run_credit[worst]:
-                return np.asarray([worst])
-            return np.empty(0, np.int64)
-        if self.static_rt_fns is not None:
-            # RT tasks preempt CFS tasks immediately
-            rt_waiting = np.isin(st.th_fn[wait_mask], self.static_rt_fns).any()
-            if rt_waiting:
-                run_is_cfs = running & ~np.isin(
-                    st.th_fn[np.maximum(st.core_thread, 0)], self.static_rt_fns
-                )
-                idx = np.where(run_is_cfs)[0]
-                return idx[:1]
-            return np.empty(0, np.int64)
-        # CFS / EEVDF wakeup preemption: waiting group vrt far behind running
-        gran = st.tick_sec  # wakeup_granularity ~ one tick
-        wait_v = st.fn_vrt[st.th_fn[wait_mask]].min()
-        run_v = np.where(
-            running, st.fn_vrt[st.th_fn[np.maximum(st.core_thread, 0)]], -np.inf
-        )
-        worst = int(np.argmax(run_v))
-        if wait_v + gran < run_v[worst]:
-            return np.asarray([worst])
-        return np.empty(0, np.int64)
-
-
-def make_policy(name: str, **kw) -> Policy:
-    name = name.lower()
-    if name == "cfs":
-        return Policy(name="cfs", **kw)
-    if name == "cfs-tuned":
-        return Policy(name="cfs-tuned", slice_ticks=TUNED_SLICE_TICKS, **kw)
-    if name == "eevdf":
-        return Policy(name="eevdf", eevdf=True, **kw)
-    if name == "eevdf-tuned":
-        return Policy(
-            name="eevdf-tuned", eevdf=True, slice_ticks=TUNED_SLICE_TICKS, **kw
-        )
-    if name == "rr":
-        return Policy(name="rr", rr=True, slice_ticks=TUNED_SLICE_TICKS, **kw)
-    if name == "lags":
-        return Policy(name="lags", lags=True, **kw)
-    if name == "lags-static":
-        return Policy(
-            name="lags-static", slice_ticks=TUNED_SLICE_TICKS, **kw
-        )
-    raise ValueError(f"unknown policy {name!r}")
+__all__ = [
+    "CFS_DEFAULT_SLICE_TICKS", "TUNED_SLICE_TICKS", "Policy", "make_policy",
+]

@@ -19,8 +19,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import load_credit as lc
-from repro.core.policies import Policy
 from repro.core.switch_cost import switch_cost_us
+from repro.sched import Policy
 from repro.obs import metrics as obs_metrics
 from repro.obs.schedstats import EntityStats, SchedStats
 
@@ -321,12 +321,10 @@ def simulate(
         # also accounts for wakeup-preemption storms: at high contention a
         # woken task usually preempts another core, doubling the effective
         # switch rate (this is the paper's "rate" growth term, Fig 10).
-        # Under CFS the next pick follows global vruntime order (cross-cgroup
-        # with prob 1 - (sib-1)/(n-1)); under LAGS cores serving the current
-        # lightest groups hand off to siblings (leaf-rq-only re-insert) and a
-        # sole runnable thread of the lightest group is re-picked without a
-        # task switch at all; LAGS cores at the credit frontier behave like
-        # CFS.  Credit-ordered picking also halves preemption churn.
+        # The per-policy handoff cost (vruntime-ordered picks vs LAGS
+        # run-to-completion) lives in the policy protocol —
+        # ``repro.sched.numpy_backend.Policy.voluntary_switch``; this engine
+        # only supplies the calibrated same/cross-cgroup cost samples.
         if cfg.model_switch_cost and running.any():
             burst_s = cfg.burst_us * 1e-6
             run_th_all = st.core_thread[running]
@@ -344,27 +342,9 @@ def simulate(
             )
             p_same_cfs = np.clip((sibs - 1.0) / max(n_runnable - 1.0, 1.0), 0, 1)
             cost_cfs = p_same_cfs * c_same + (1.0 - p_same_cfs) * c_cross
-            if policy.lags or policy.static_rt_fns is not None:
-                # run-to-completion: if no *waiting* group is lighter than the
-                # core's group, the handoff stays within the group (sibling
-                # switch; a sole runnable sibling is re-picked switch-free).
-                run_credit = st.credit[run_fn]
-                wait_m = st.waiting_mask()
-                if wait_m.any():
-                    w_cmin = st.credit[st.th_fn[wait_m]].min()
-                else:
-                    w_cmin = np.inf
-                in_order = run_credit <= w_cmin + 1e-12
-                solo = sibs <= 1.0
-                cost_v = np.where(
-                    in_order & solo, 0.0, np.where(in_order, c_same, cost_cfs)
-                )
-                # credit-based wakeup preemption fires on lighter-group wakes,
-                # slightly less often than CFS's vruntime preemption
-                spb = 1.0 + 0.85 * p_preempt
-            else:
-                cost_v = cost_cfs
-                spb = 1.0 + p_preempt
+            cost_v, spb = policy.voluntary_switch(
+                st, run_fn, sibs, c_same, c_cross, cost_cfs, p_preempt
+            )
             cost_v_s = cost_v * 1e-6 * spb
             frac_ovh = cost_v_s / (burst_s + cost_v_s)
             e = eff[running]

@@ -1,23 +1,28 @@
 """JAX tick simulator: the paper's scheduler as a composable JAX module.
 
-A functional ``lax.scan`` port of ``simkernel`` supporting CFS and CFS-LAGS.
-Fully jit-able, ``vmap``-able over nodes, and pjit-shardable over the
-production mesh — the cluster consolidation study runs hundreds of simulated
-nodes data-parallel on a pod (see ``repro.core.cluster`` and
+A functional ``lax.scan`` port of ``simkernel``.  Fully jit-able,
+``vmap``-able over nodes, and pjit-shardable over the production mesh —
+the cluster consolidation study runs hundreds of simulated nodes
+data-parallel on a pod (see ``repro.core.cluster`` and
 ``benchmarks/fig7_cluster.py``).
 
-Modelling simplifications vs the numpy engine (validated against it in
-``tests/test_simkernel_jax.py``): requests are pre-assigned round-robin to a
-fixed per-function slot pool (FIFO within a slot), and core assignment is a
-per-tick top-C selection (sticky-core switch accounting is statistical, as in
-the numpy engine's burst model).
+Policy logic lives entirely in ``repro.sched.jax_backend``: the policy
+code in :class:`SimParams` is a static jit argument resolved to pure
+``jnp`` key / stickiness / voluntary-cost functions at trace time, so
+**every** policy kind — CFS, EEVDF, SCHED_RR, CFS-LAGS, CFS-LAGS-static
+and the tuned-slice variants — runs through this one scan body with no
+policy branching here.
 
-Policy codes: 0 = CFS (hierarchical vruntime), 1 = CFS-LAGS (Load Credit).
+Modelling simplifications vs the numpy engine (validated against it in
+``tests/test_simkernel_jax.py``): requests are pre-assigned round-robin to
+a fixed per-function slot pool (FIFO within a slot), core assignment is a
+per-tick top-C selection with slice stickiness (sticky-core switch
+accounting is statistical, as in the numpy engine's burst model).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +30,13 @@ import numpy as np
 
 from repro.core import load_credit as lc
 from repro.core.switch_cost import BASE_US, CROSS_US, PUT_US, SET_US
+from repro.sched import jax_backend as jb
 
 TICK = lc.TICK_SEC
 
-CFS, LAGS = 0, 1
+# historical two-policy codes, re-exported for existing callers; the full
+# set (EEVDF, RR, LAGS_STATIC, *_TUNED) lives in repro.sched.jax_backend
+CFS, LAGS = jb.CFS, jb.LAGS
 
 
 class SlotTrace(NamedTuple):
@@ -43,10 +51,11 @@ class SimParams(NamedTuple):
     n_cores: int
     n_fns: int
     n_ticks: int
-    policy: int = CFS
+    policy: int = CFS  # repro.sched.jax_backend code (static)
     burst_us: float = 120.0
     depth: float = 2.0
     window_ticks: int = 1000
+    rt_fns: Tuple[int, ...] = ()  # lags-static: fn ids under SCHED_RR
 
 
 def _switch_cost_us(same, sib, grp, depth):
@@ -84,9 +93,15 @@ def simulate(trace: SlotTrace, p: SimParams):
     """Returns dict of per-request completion ticks + node-level counters."""
     T, R = trace.arrival_tick.shape
     C = p.n_cores
+    spec = jb.spec_of(p.policy)
+    slice_ticks = spec.slice_ticks
+    is_rt_fn = jnp.zeros(p.n_fns, bool)
+    if p.rt_fns:
+        is_rt_fn = is_rt_fn.at[jnp.asarray(p.rt_fns, jnp.int32)].set(True)
 
     def tick_body(state, tick):
-        ptr, rem, vrt_fn, load, credit, busy, ovh, done_tick = state
+        (ptr, rem, vrt_fn, load, credit, busy, ovh, done_tick,
+         last_pick, slice_left, prev_picked) = state
 
         # activate: slot idle (rem<=0, i.e. between requests) whose next
         # request has arrived
@@ -98,24 +113,53 @@ def simulate(trace: SlotTrace, p: SimParams):
         rem = jnp.where(can_start, new_dem, rem)
         runnable = rem > 0.0
 
-        # policy key
-        fnv = vrt_fn[trace.slot_fn]
-        cred = credit[trace.slot_fn]
-        key = jnp.where(p.policy == LAGS, cred, fnv)
+        # group stats (shared mechanism, not policy)
+        sib_count = jnp.zeros(p.n_fns).at[trace.slot_fn].add(
+            runnable.astype(jnp.float32)
+        )
+        fn_runnable = sib_count > 0
+
+        # policy key via the protocol backend; deterministic tie-break by
+        # slot id is this backend's secondary
+        view = jb.PolicyView(
+            ent_group=trace.slot_fn,
+            group_vrt=vrt_fn,
+            group_credit=credit,
+            last_pick_tick=last_pick,
+            runnable=runnable,
+            group_runnable=fn_runnable,
+            is_rt_group=is_rt_fn,
+            tick_sec=TICK,
+            slice_ticks=slice_ticks,
+        )
+        key = jb.primary_key(p.policy, view)
         key = jnp.where(runnable, key, jnp.inf)
-        # deterministic tie-break by slot id
         key = key + jnp.arange(T) * 1e-12
+
+        # slice stickiness: a slot that holds an unexpired slice keeps its
+        # core unless the policy's preemption rule voids it
+        continuing = prev_picked & (slice_left > 0) & runnable
+        sticky = jb.sticky_mask(p.policy, view, continuing)
+        key = jnp.where(sticky, key - 1e18, key)
 
         # pick C best runnable
         neg, idx = jax.lax.top_k(-key, C)
         picked = jnp.isfinite(-neg)  # (C,)
         run_slots = jnp.where(picked, idx, -1)
-
-        # group stats
-        sib_count = jnp.zeros(p.n_fns).at[trace.slot_fn].add(
-            runnable.astype(jnp.float32)
+        picked_slot = jnp.zeros(T, bool).at[jnp.maximum(run_slots, 0)].set(
+            picked
         )
-        n_grp = jnp.sum(sib_count > 0)
+
+        # slice bookkeeping
+        slice_left = jnp.where(
+            picked_slot,
+            jnp.where(continuing, slice_left - 1, slice_ticks - 1),
+            0,
+        )
+        last_pick = jnp.where(picked_slot, tick.astype(last_pick.dtype),
+                              last_pick)
+
+        n_grp = jnp.sum(fn_runnable)
         n_run = jnp.sum(runnable)
 
         run_fn = trace.slot_fn[jnp.maximum(run_slots, 0)]
@@ -129,13 +173,14 @@ def simulate(trace: SlotTrace, p: SimParams):
         cost_cfs = p_same_cfs * c_same + (1 - p_same_cfs) * c_cross
 
         run_credit = credit[run_fn]
-        masked_cred = jnp.where(sib_count > 0, credit, jnp.inf)
+        masked_cred = jnp.where(fn_runnable, credit, jnp.inf)
         wait_cmin = jnp.min(masked_cred)
-        in_order = run_credit <= wait_cmin + 1e-12
-        solo = sibs <= 1.0
-        cost_lags = jnp.where(in_order & solo, 0.0, jnp.where(in_order, c_same, cost_cfs))
-        spb = jnp.where(p.policy == LAGS, 1.0 + 0.85 * p_pre, 1.0 + p_pre)
-        cost_v = jnp.where(p.policy == LAGS, cost_lags, cost_cfs) * 1e-6 * spb
+        cost_us, spb = jb.voluntary_switch(
+            p.policy, c_same=c_same, c_cross=c_cross, cost_cfs=cost_cfs,
+            run_credit=run_credit, wait_cmin=wait_cmin, sibs=sibs,
+            p_preempt=p_pre,
+        )
+        cost_v = cost_us * 1e-6 * spb
 
         eff = jnp.where(picked, TICK * (cfg_burst := p.burst_us * 1e-6)
                         / (cfg_burst + cost_v), 0.0)
@@ -165,7 +210,8 @@ def simulate(trace: SlotTrace, p: SimParams):
         # fn vruntime advances by group core-time
         vrt_fn = vrt_fn + jnp.zeros(p.n_fns).at[run_fn].add(eff * picked)
 
-        return (ptr, new_rem, vrt_fn, load, credit, busy, ovh, done_flat), None
+        return (ptr, new_rem, vrt_fn, load, credit, busy, ovh, done_flat,
+                last_pick, slice_left, picked_slot), None
 
     init = (
         jnp.zeros(T, jnp.int32),
@@ -176,9 +222,13 @@ def simulate(trace: SlotTrace, p: SimParams):
         jnp.zeros(()),
         jnp.zeros(()),
         jnp.full((T * R,), -1, jnp.int32),
+        jnp.zeros(T),  # last_pick tick
+        jnp.zeros(T, jnp.int32),  # slice_left
+        jnp.zeros(T, bool),  # prev_picked
     )
     state, _ = jax.lax.scan(tick_body, init, jnp.arange(p.n_ticks))
-    ptr, rem, vrt_fn, load, credit, busy, ovh, done = state
+    (ptr, rem, vrt_fn, load, credit, busy, ovh, done,
+     _last_pick, _slice_left, _prev_picked) = state
     return {
         "done_tick": done.reshape(T, R),
         "busy_s": busy,

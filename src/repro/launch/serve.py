@@ -25,6 +25,7 @@ import repro.obs as obs
 from repro.core.traces import _mmpp_arrivals
 from repro.obs import report as obs_report
 from repro.obs.recorder import record_run
+from repro.sched import serving as sched_serving
 from repro.scheduler.tenant import Request, Tenant
 from repro.serving.engine import Engine, EngineConfig
 
@@ -50,12 +51,19 @@ def build_workload(n_tenants: int, duration: float, seed: int = 0):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="lags", choices=["lags", "fair", "fifo"])
+    ap.add_argument("--policy", default="lags",
+                    choices=sorted(sched_serving.ADMISSION))
     ap.add_argument("--tenants", type=int, default=48)
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--slots", type=int, default=16)
     ap.add_argument("--max-resident", type=int, default=12,
                     help="tenants whose weights fit in HBM (residency LRU)")
+    ap.add_argument("--hysteresis", type=float, default=0.5,
+                    help="LAGS preemption hysteresis: a waiting tenant "
+                         "evicts only when credit < hysteresis * victim's")
+    ap.add_argument("--pallas-threshold", type=int, default=256,
+                    help="tenant count at which the credit tick moves onto "
+                         "the fused Pallas kernel (0 = never)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real-model", action="store_true")
     ap.add_argument("--obs-dir", default="",
@@ -72,7 +80,9 @@ def main(argv=None):
     tenants, arrivals = build_workload(args.tenants, args.duration, args.seed)
     eng = Engine(
         EngineConfig(policy=args.policy, n_slots=args.slots,
-                     max_resident=args.max_resident),
+                     max_resident=args.max_resident,
+                     preempt_hysteresis=args.hysteresis,
+                     pallas_threshold=args.pallas_threshold),
         tenants,
     )
     if args.real_model:

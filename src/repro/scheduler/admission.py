@@ -1,14 +1,12 @@
-"""Admission policies for the continuous-batching engine.
+"""Admission entry points for the continuous-batching engine.
 
-``fair``  — the CFS analogue: tenants are admitted in attained-service order
-            (vruntime-equal share), preempting the batch membership whenever
-            a less-served tenant waits: maximal fairness, maximal batch churn.
-``lags``  — the paper's policy: admit requests from the tenant with the
-            LOWEST Load Credit and keep its requests running to completion
-            as long as no lighter tenant is waiting (run-to-completion over
-            the credit window).  Fewer membership changes -> fewer engine
-            "context switches" (weight swaps, page churn, re-dispatch).
-``fifo``  — arrival order, no tenant-awareness (baseline).
+Thin facade over the unified policy core: the actual admission policies
+(``fifo`` / ``fair`` / ``lags``) live in ``repro.sched.serving`` and are
+resolved by registry lookup — no policy-specific branching here.  The
+LAGS credit ordering and hysteresis preemption are the same protocol
+rules the node simulators use (``repro.sched.protocol.credit_preempt``);
+the hysteresis is a caller-supplied config value
+(``EngineConfig.preempt_hysteresis``), not a constant.
 """
 from __future__ import annotations
 
@@ -16,6 +14,12 @@ from typing import Dict, List, Tuple
 
 from repro.obs import metrics as obs_metrics
 from repro.scheduler.tenant import Request, Tenant
+from repro.sched.serving import admission_policy
+
+#: engine default: demand a clear credit gap before paying a membership
+#: change (an engine batch re-formation is far costlier than a kernel
+#: task switch, so the engine is more reluctant than the node's 1.0)
+DEFAULT_PREEMPT_HYSTERESIS = 0.5
 
 
 def pick_admissions(
@@ -25,68 +29,24 @@ def pick_admissions(
     running_tenants: set,
 ) -> List[Request]:
     """Choose queued requests to admit into the free batch slots."""
-    waiting = [t for t in tenants.values() if t.queue]
-    if not waiting or free_slots <= 0:
-        return []
-
-    if policy == "fifo":
-        reqs = sorted(
-            (t.queue[0] for t in waiting), key=lambda r: r.arrival
-        )
-        out = []
-        for r in reqs[:free_slots]:
-            tenants[r.tenant].queue.popleft()
-            out.append(r)
+    out = admission_policy(policy).pick(tenants, free_slots, running_tenants)
+    if out:
         obs_metrics.counter(f"admission.{policy}.admitted").inc(len(out))
-        return out
-
-    if policy == "fair":
-        # CFS analogue: round-robin admission, least-recently-admitted first
-        order = sorted(waiting, key=lambda t: (t.last_admit, t.tid))
-    elif policy == "lags":
-        # lowest Load Credit first; drain that tenant's whole queue before
-        # moving on (run-to-completion)
-        order = sorted(waiting, key=lambda t: (t.credit, t.tid))
-    else:
-        raise ValueError(f"unknown admission policy {policy!r}")
-
-    out: List[Request] = []
-    if policy == "lags":
-        for t in order:
-            while t.queue and len(out) < free_slots:
-                out.append(t.queue.popleft())
-            if len(out) >= free_slots:
-                break
-    else:
-        # round-robin one per tenant until slots exhausted
-        while len(out) < free_slots:
-            progressed = False
-            for t in order:
-                if t.queue and len(out) < free_slots:
-                    out.append(t.queue.popleft())
-                    progressed = True
-            if not progressed:
-                break
-    obs_metrics.counter(f"admission.{policy}.admitted").inc(len(out))
     return out
 
 
 def should_preempt(
-    policy: str, tenants: Dict[int, Tenant], running_tenants: set
+    policy: str,
+    tenants: Dict[int, Tenant],
+    running_tenants: set,
+    hysteresis: float = DEFAULT_PREEMPT_HYSTERESIS,
 ) -> Tuple[bool, int]:
-    """LAGS global path: a waiting tenant lighter than a running one may
-    claim a slot (returns (True, victim_tid))."""
-    waiting = [t for t in tenants.values() if t.queue]
-    if not waiting or not running_tenants:
-        return False, -1
-    if policy != "lags":
-        return False, -1
-    lightest_wait = min(waiting, key=lambda t: t.credit)
-    heaviest_run = max(
-        (tenants[tid] for tid in running_tenants), key=lambda t: t.credit
+    """LAGS global path: a waiting tenant lighter than a running one (by
+    more than the hysteresis gap) may claim a slot
+    (returns (True, victim_tid))."""
+    fire, victim = admission_policy(policy).preempt(
+        tenants, running_tenants, hysteresis
     )
-    # hysteresis: evict only on a clear credit gap, else run-to-completion
-    if lightest_wait.credit < 0.5 * heaviest_run.credit - 1e-12:
-        obs_metrics.counter("admission.lags.preemptions").inc()
-        return True, heaviest_run.tid
-    return False, -1
+    if fire:
+        obs_metrics.counter(f"admission.{policy}.preemptions").inc()
+    return fire, victim

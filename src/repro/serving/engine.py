@@ -25,6 +25,7 @@ import numpy as np
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.obs.schedstats import SchedStats
+from repro.sched import pallas_backend
 from repro.scheduler.admission import pick_admissions, should_preempt
 from repro.scheduler.tenant import Request, Tenant
 from repro.serving.kvcache import PagedAllocator
@@ -35,7 +36,17 @@ class EngineConfig:
     n_slots: int = 16  # concurrent decode streams
     n_pages: int = 4096
     page_tokens: int = 128
-    policy: str = "lags"  # lags | fair | fifo
+    policy: str = "lags"  # any repro.sched.serving admission policy
+    # LAGS preemption hysteresis (repro.sched.protocol.credit_preempt): a
+    # waiting tenant evicts a running one only when its credit is below
+    # hysteresis * victim_credit.  The engine default demands a clear gap
+    # (0.5) because a batch membership change is far costlier than the
+    # kernel task switch the node simulators model with hysteresis 1.0.
+    preempt_hysteresis: float = 0.5
+    # route the per-step Load-Credit tick through the fused Pallas kernel
+    # (repro.sched.pallas_backend) once the tenant count reaches this
+    # threshold; 0 disables the kernel path entirely
+    pallas_threshold: int = 256
     # step cost model (seconds)
     base_step_s: float = 0.010  # one decode step for a full batch
     per_prefill_tok_s: float = 2.0e-6
@@ -132,7 +143,9 @@ class Engine:
 
         # LAGS global path: lighter waiting tenant may evict a heavy one
         running_tids = {r.tenant for r in self.running}
-        preempt, victim = should_preempt(cfg.policy, self.tenants, running_tids)
+        preempt, victim = should_preempt(
+            cfg.policy, self.tenants, running_tids, cfg.preempt_hysteresis
+        )
         if preempt and len(self.running) >= cfg.n_slots:
             # suspend one running request of the victim tenant: pages and
             # prefill state are KEPT (the Linux analogue: a preempted thread
@@ -186,6 +199,7 @@ class Engine:
         if change:
             swap_mb = 0.0
             swapped: set = set()
+            evicted: List[int] = []
             for t in members - self._prev_members:
                 if t in self._resident:
                     self._resident.remove(t)  # refresh LRU position
@@ -200,10 +214,13 @@ class Engine:
                 if victim_t is None:
                     break
                 self._resident.remove(victim_t)
+                evicted.append(victim_t)
             switch_s = (
                 cfg.swap_s_per_mb * swap_mb
                 + cfg.dispatch_s_per_member_change * len(change)
             )
+            if obs_tracing.active():
+                self._trace_residency(swapped, evicted)
             # schedstat switch accounting: one "context switch" per changed
             # member; a residency hit is the cheap same-group analogue
             per_change = switch_s / len(change)
@@ -241,8 +258,72 @@ class Engine:
             served[r.tenant] = served.get(r.tenant, 0.0) + service_per_req
         for tid, s in served.items():
             st.sched.account_useful(tid, s)
-        for tid, t in self.tenants.items():
-            t.tick(served.get(tid, 0.0), step_s, cfg.credit_window)
+        if (
+            cfg.pallas_threshold
+            and len(self.tenants) >= cfg.pallas_threshold
+            and pallas_backend.available()
+        ):
+            self._pallas_tick(served, step_s)
+        else:
+            for tid, t in self.tenants.items():
+                t.tick(served.get(tid, 0.0), step_s, cfg.credit_window)
+
+    def _pallas_tick(self, served: Dict[int, float], step_s: float):
+        """Per-step Load-Credit tick via the fused Pallas kernel.
+
+        One kernel launch replaces the O(T) Python PELT/EMA loop at high
+        tenant counts.  Same update rule as ``Tenant.tick`` (f32 on the
+        kernel vs f64 in Python — the cross-backend differential tests pin
+        the pick order to match within that precision).  The kernel also
+        returns the k-lowest-credit pick order — exactly the LAGS admission
+        order ``pick_admissions`` applies next step.
+        """
+        cfg = self.cfg
+        tids = sorted(self.tenants)
+        load = np.asarray([self.tenants[t].load_avg for t in tids])
+        cred = np.asarray([self.tenants[t].credit for t in tids])
+        frac = np.asarray(
+            [served.get(t, 0.0) / max(step_s, 1e-9) for t in tids]
+        )
+        runnable = np.asarray(
+            [bool(self.tenants[t].queue) for t in tids], bool
+        )
+        new_load, new_cred, _picks = pallas_backend.tick_and_pick(
+            load, cred, frac, runnable, cfg.n_slots,
+            window=cfg.credit_window,
+        )
+        for i, tid in enumerate(tids):
+            t = self.tenants[tid]
+            t.load_avg = float(new_load[i])
+            t.credit = float(new_cred[i])
+            t.served_s += served.get(tid, 0.0)
+
+    def _trace_residency(self, swapped: set, evicted: List[int]):
+        """Perfetto events for HBM residency churn, on the sim clock:
+        one instant per weight swap (tenant + bytes) and a counter track
+        sampling HBM occupancy after the LRU update."""
+        tr = obs_tracing.tracer()
+        now_us = self.stats.time_s * 1e6
+        for t in sorted(swapped):
+            tr.emit(
+                "hbm.swap_in", "residency", now_us, 0.0,
+                {"tenant": t, "mb": self.tenants[t].weight_mb}, ph="i",
+            )
+        for t in evicted:
+            tr.emit(
+                "hbm.evict", "residency", now_us, 0.0,
+                {"tenant": t, "mb": self.tenants[t].weight_mb}, ph="i",
+            )
+        tr.emit(
+            "hbm.resident", "counter", now_us, 0.0,
+            {
+                "tenants": len(self._resident),
+                "mb": sum(self.tenants[x].weight_mb for x in self._resident),
+            },
+            ph="C",
+        )
+        obs_metrics.counter("engine.hbm_swaps").inc(len(swapped))
+        obs_metrics.counter("engine.hbm_evictions").inc(len(evicted))
 
     def _real_decode(self):
         import jax.numpy as jnp

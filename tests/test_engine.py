@@ -4,7 +4,11 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.scheduler.admission import pick_admissions
+from repro.scheduler.admission import (
+    DEFAULT_PREEMPT_HYSTERESIS,
+    pick_admissions,
+    should_preempt,
+)
 from repro.scheduler.tenant import Request, Tenant
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.kvcache import PagedAllocator
@@ -70,6 +74,71 @@ def test_fair_admission_round_robins():
     tenants[1].queue.extend(Request(10 + i, 1, 10, 5, 0.0) for i in range(3))
     out = pick_admissions("fair", tenants, free_slots=4, running_tenants=set())
     assert [r.tenant for r in out] == [1, 0, 1, 0]
+
+
+def test_preempt_hysteresis_boundary():
+    """Documented boundary (EngineConfig.preempt_hysteresis): a waiting
+    tenant evicts only when its credit is *strictly below*
+    hysteresis * victim_credit; equality runs to completion."""
+    assert DEFAULT_PREEMPT_HYSTERESIS == 0.5
+    tenants = {0: Tenant(0), 1: Tenant(1)}
+    tenants[0].credit = 1.0
+    tenants[1].credit = 0.5  # wait == h * run exactly
+    tenants[1].queue.append(Request(0, 1, 10, 5, 0.0))
+    assert should_preempt("lags", tenants, {0}) == (False, -1)
+    tenants[1].credit = 0.5 - 1e-6  # just under the boundary
+    assert should_preempt("lags", tenants, {0}) == (True, 0)
+    # node-simulator setting: hysteresis 1.0 fires on any lighter waiter
+    tenants[1].credit = 0.99
+    assert should_preempt("lags", tenants, {0}, hysteresis=1.0) == (True, 0)
+    assert should_preempt("lags", tenants, {0}, hysteresis=0.5) == (False, -1)
+
+
+def test_engine_config_hysteresis_controls_eviction():
+    """The same credit state evicts under hysteresis 1.0 but runs to
+    completion under the engine default 0.5."""
+
+    def run(h):
+        eng, tenants = _mk_engine(
+            "lags", n_tenants=2, n_slots=1, preempt_hysteresis=h
+        )
+        eng.submit(Request(0, 0, 10, 400, 0.0))
+        eng.step()
+        assert {r.tenant for r in eng.running} == {0}
+        tenants[0].credit = 1.0
+        tenants[1].credit = 0.6
+        eng.submit(Request(1, 1, 10, 5, 0.0))
+        eng.step()
+        return {r.tenant for r in eng.running}
+
+    assert run(1.0) == {1}  # 0.6 < 1.0: tenant 0 preempted
+    assert run(0.5) == {0}  # 0.6 >= 0.5: no clear gap, keep running
+
+
+def test_residency_trace_events():
+    """HBM residency churn is traced: swap-in/evict instants plus an
+    occupancy counter track, all on the sim clock."""
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
+
+    tr = obs_tracing.install()
+    try:
+        eng, _ = _mk_engine("fair", n_tenants=8, max_resident=2, n_slots=4)
+        reqs = [Request(i, i % 8, 32, 4, arrival=0.0) for i in range(16)]
+        eng.run(20.0, reqs)
+        events = tr.events()
+        swaps = [e for e in events if e["name"] == "hbm.swap_in"]
+        assert swaps and all(e["ph"] == "i" for e in swaps)
+        assert {"tenant", "mb"} <= set(swaps[0]["args"])
+        assert any(e["name"] == "hbm.evict" for e in events)
+        counters = [e for e in events if e["name"] == "hbm.resident"]
+        assert counters and all(e["ph"] == "C" for e in counters)
+        assert all(e["args"]["tenants"] <= 8 for e in counters)
+        # sim clock, not wall clock: timestamps stay within the run window
+        assert all(0.0 <= e["ts"] <= 20.0 * 1e6 for e in swaps + counters)
+    finally:
+        obs_tracing.uninstall()
+        obs_metrics.disable()
 
 
 def test_lags_latency_beats_fair_bursty():

@@ -1,0 +1,160 @@
+"""Unified policy protocol: registry, keys, hysteresis, invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import load_credit as lc
+from repro.sched import numpy_backend as nb
+from repro.sched import protocol
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_has_all_policies():
+    names = protocol.names()
+    for n in ("cfs", "cfs-tuned", "eevdf", "eevdf-tuned", "rr", "lags",
+              "lags-static"):
+        assert n in names
+    assert {protocol.spec(n).kind for n in names} == set(protocol.KINDS)
+
+
+def test_registry_lookup_and_overrides():
+    s = protocol.spec("lags")
+    assert s.kind == "lags" and s.preempt_hysteresis == 1.0
+    s2 = protocol.spec("lags", preempt_hysteresis=0.25, credit_window=64)
+    assert s2.preempt_hysteresis == 0.25 and s2.credit_window == 64
+    # overrides never mutate the registered spec
+    assert protocol.spec("lags").preempt_hysteresis == 1.0
+    with pytest.raises(ValueError):
+        protocol.spec("not-a-policy")
+    with pytest.raises(ValueError):
+        protocol.register(protocol.PolicySpec("bad", "not-a-kind"))
+
+
+def test_make_policy_compat_surface():
+    p = nb.make_policy("cfs-tuned")
+    assert p.slice_ticks == protocol.TUNED_SLICE_TICKS
+    assert not p.lags and not p.run_to_completion
+    p = nb.make_policy("lags-static", static_rt_fns=[0, 3])
+    assert p.run_to_completion
+    assert list(p.static_rt_fns) == [0, 3]
+    assert p.spec.static_rt_fns == (0, 3)
+
+
+# -- hysteresis preemption rule --------------------------------------------
+
+def test_credit_preempt_boundary():
+    """The documented boundary: strictly below hysteresis*run fires,
+    at the boundary (or above) it does not."""
+    assert protocol.credit_preempt(0.49, 1.0, 0.5)
+    assert not protocol.credit_preempt(0.5, 1.0, 0.5)  # exact boundary
+    assert not protocol.credit_preempt(0.51, 1.0, 0.5)
+    # node-simulator setting: any strictly lighter waiter fires
+    assert protocol.credit_preempt(0.999999, 1.0, 1.0)
+    assert not protocol.credit_preempt(1.0, 1.0, 1.0)  # equal -> no churn
+    # float-noise guard: epsilon-equal credits do not fire
+    assert not protocol.credit_preempt(1.0 - 1e-15, 1.0, 1.0)
+
+
+@given(st.floats(0.0, 4.0), st.floats(0.0, 4.0), st.floats(0.1, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_credit_preempt_monotone(wait, run, h):
+    """If a waiter fires at hysteresis h, any lighter waiter also fires,
+    and any higher hysteresis also fires."""
+    if protocol.credit_preempt(wait, run, h):
+        assert protocol.credit_preempt(wait * 0.5, run, h)
+        assert protocol.credit_preempt(wait, run, min(1.0, h * 1.5))
+
+
+# -- key monotonicity -------------------------------------------------------
+
+def _view(credits, vrts, ent_group, last_pick=None):
+    credits = np.asarray(credits, float)
+    vrts = np.asarray(vrts, float)
+    ent_group = np.asarray(ent_group, int)
+    T = len(ent_group)
+    return nb.EntityView(
+        ent_group=ent_group,
+        group_vrt=vrts,
+        group_credit=credits,
+        last_pick_tick=np.zeros(T) if last_pick is None
+        else np.asarray(last_pick, float),
+        runnable=np.ones(T, bool),
+        group_runnable=np.ones(len(credits), bool),
+        is_rt_group=np.zeros(len(credits), bool),
+    )
+
+
+@given(
+    st.lists(st.floats(0.01, 4.0), min_size=2, max_size=8),
+    st.integers(0, 7),
+)
+@settings(max_examples=40, deadline=None)
+def test_lags_key_monotone_in_credit(credits, which):
+    """Lowering a group's credit never worsens its entities' rank."""
+    g = which % len(credits)
+    ent_group = np.arange(len(credits))
+    v = _view(credits, np.zeros(len(credits)), ent_group)
+    before = nb.primary_key(protocol.spec("lags"), v)
+    rank_before = int(np.sum(before < before[g]))
+    lowered = list(credits)
+    lowered[g] *= 0.5
+    v2 = _view(lowered, np.zeros(len(credits)), ent_group)
+    after = nb.primary_key(protocol.spec("lags"), v2)
+    rank_after = int(np.sum(after < after[g]))
+    assert rank_after <= rank_before
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=2, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_cfs_key_orders_by_vruntime(vrts):
+    v = _view(np.zeros(len(vrts)), vrts, np.arange(len(vrts)))
+    key = nb.primary_key(protocol.spec("cfs"), v)
+    assert np.array_equal(np.argsort(key, kind="stable"),
+                          np.argsort(np.asarray(vrts), kind="stable"))
+
+
+def test_lags_static_rt_sorts_before_all_cfs():
+    v = _view([1.0, 1.0, 1.0], [0.0, 5.0, 99.0], [0, 1, 2],
+              last_pick=[7.0, 0.0, 3.0])
+    v.is_rt_group[2] = True
+    key = nb.primary_key(protocol.spec("lags-static"), v)
+    assert key[2] < key[0] and key[2] < key[1]  # RT first, always
+    assert key[0] < key[1]  # CFS part still vruntime-ordered
+
+
+def test_eevdf_ineligible_sorts_last_but_keeps_tiebreak():
+    """The ineligible offset must not quantize away the composite-key
+    secondary (the regression that motivated EEVDF_INELIGIBLE=1e4)."""
+    base = protocol.EEVDF_INELIGIBLE
+    composite = base * 1e9 + 0.25
+    assert composite != base * 1e9  # rank survives float64 addition
+    v = _view(np.zeros(3), [0.0, 10.0, 0.1], np.arange(3))
+    key = nb.primary_key(protocol.spec("eevdf"), v)
+    assert np.argmax(key) == 1  # far-ahead vruntime is ineligible -> last
+
+
+# -- credit-window invariants ----------------------------------------------
+
+@given(
+    st.sampled_from(["lags", "lags-static"]),
+    st.lists(st.floats(0.0, 8.0), min_size=1, max_size=120),
+)
+@settings(max_examples=30, deadline=None)
+def test_credit_window_invariants(name, fracs):
+    """Credit driven through a spec's window stays within [0, max(frac)]
+    and a shorter window reacts at least as fast (paper §4.2)."""
+    spec = protocol.spec(name)
+    fast = protocol.spec(name, credit_window=max(spec.credit_window // 8, 2))
+    c_slow = c_fast = l_slow = l_fast = 0.0
+    for f in fracs:
+        l_slow = lc.pelt_update(l_slow, f)
+        l_fast = lc.pelt_update(l_fast, f)
+        c_slow = lc.ema_update(c_slow, l_slow, spec.credit_window)
+        c_fast = lc.ema_update(c_fast, l_fast, fast.credit_window)
+    bound = max(fracs) + 1e-9
+    assert 0.0 <= c_slow <= bound and 0.0 <= c_fast <= bound
+    if all(f == fracs[0] for f in fracs):
+        # constant input: the short window is at least as converged
+        assert abs(c_fast - l_fast) <= abs(c_slow - l_slow) + 1e-12
