@@ -4,26 +4,39 @@
 #   scripts/check.sh            # from the repo root
 #
 # The smoke run drives launch/serve.py for 2 simulated seconds with tracing
-# enabled, then renders the run record with the report CLI — exercising the
-# whole obs path (metrics registry, schedstats, tracer, recorder, report).
+# and a live schedstats checkpoint enabled, then renders the run record with
+# the report CLI — exercising the whole obs path (metrics registry,
+# schedstats, tracer, recorder, report, checkpoint stream).  A second smoke
+# runs a 2-node fleet and merges the per-node run records into one fleet
+# view (`report --merge`).
+#
+# In CI (CI env var set) the dev extras are installed first so the property
+# tests run under the *real* hypothesis engine with its shrinker; locally —
+# and in the network-less container — the tests/conftest.py mini-engine is
+# the fallback.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src
 
+if [ -n "${CI:-}" ] && ! python -c "import hypothesis" 2>/dev/null; then
+    echo "== CI: installing dev extras (real hypothesis engine) =="
+    pip install -r requirements-dev.txt
+fi
+
 echo "== tier-1 test suite =="
 python -m pytest -q
 
 echo
-echo "== obs-off regression gate: density-9 simkernel, telemetry disabled =="
+echo "== obs-off regression gate: density-9 simkernel + 3-node fleet =="
 python scripts/obs_gate.py
 
 echo
-echo "== obs smoke: 2 s serve run with tracing =="
+echo "== obs smoke: 2 s serve run with tracing + checkpoint stream =="
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
 python -m repro.launch.serve --policy lags --tenants 8 --duration 2 \
-    --obs-dir "$tmp/lags" --trace
+    --obs-dir "$tmp/lags" --trace --checkpoint-every 1
 python -m repro.obs.report "$tmp/lags"
 python - "$tmp/lags/trace.json" <<'PY'
 import json, sys
@@ -31,6 +44,18 @@ obj = json.load(open(sys.argv[1]))
 assert obj["traceEvents"], "empty trace"
 print(f"trace OK: {len(obj['traceEvents'])} events")
 PY
+
+echo
+echo "== fleet smoke: 2-node fleet, merged report =="
+python - "$tmp/fleet" <<'PY'
+import sys
+from repro.fleet import make_policy, place, simulate_fleet
+asg = place("spread", 20, 2, policy=make_policy("lags"))
+fleet = simulate_fleet("lags", asg, duration_s=5.0, record_dir=sys.argv[1])
+print(f"fleet OK: {fleet.n_nodes} nodes, {fleet.n_completed} completed, "
+      f"p95={fleet.pct(95):.3f}s")
+PY
+python -m repro.obs.report --merge "$tmp/fleet/node0" "$tmp/fleet/node1"
 
 echo
 echo "check.sh: all good"

@@ -17,6 +17,12 @@ busy seconds) of the same seeded run: a fingerprint mismatch means the
 simulator's *behavior* changed, which is a different failure than a
 performance regression and is reported as such.
 
+A second, fleet-level fingerprint pins the ``repro.fleet`` layer: a
+3-node density-9 sweep (324 functions placed by round-robin / pack /
+spread, policy lags) records each placement's node counts and the fleet
+completion/switch/busy totals, so placement or consolidation behavior
+cannot drift silently either.
+
 Usage (from the repo root, PYTHONPATH=src):
 
   python scripts/obs_gate.py            # check against the baseline
@@ -92,6 +98,30 @@ def _sim_once():
     return dt, fp
 
 
+FLEET_NODES = 3
+FLEET_PLACEMENTS = ("round-robin", "pack", "spread")
+FLEET_DUR_S = 5.0
+
+
+def fleet_fingerprint():
+    """Deterministic 3-node density-9 fleet sweep (behavior, not timing)."""
+    from repro.fleet import make_policy, place, simulate_fleet
+
+    fp = {}
+    for name in FLEET_PLACEMENTS:
+        asg = place(name, FLEET_NODES * N_FNS, FLEET_NODES, n_cores=N_CORES,
+                    policy=make_policy("lags"), seed=SEED)
+        fleet = simulate_fleet("lags", asg, duration_s=FLEET_DUR_S,
+                               n_cores=N_CORES, seed=SEED)
+        fp[name] = {
+            "counts": asg.counts.tolist(),
+            "completed": int(fleet.n_completed),
+            "switches": int(sum(r.switches for r in fleet.nodes)),
+            "busy_s": round(sum(r.busy_time_s for r in fleet.nodes), 6),
+        }
+    return fp
+
+
 def measure():
     from repro.obs import metrics
 
@@ -141,6 +171,7 @@ def main(argv=None) -> int:
     tol = float(os.environ.get("OBS_GATE_TOL", "0.03"))
 
     m = measure_best()
+    fleet = fleet_fingerprint()
     if args.update:
         with open(BASELINE, "w") as f:
             json.dump(
@@ -150,12 +181,18 @@ def main(argv=None) -> int:
                                  "seed": SEED, "policy": "lags"},
                     "ratio": m["ratio"],
                     "fingerprint": m["fingerprint"],
+                    "fleet": {
+                        "n_nodes": FLEET_NODES,
+                        "duration_s": FLEET_DUR_S,
+                        "placements": fleet,
+                    },
                 },
                 f, indent=2,
             )
             f.write("\n")
         print(f"obs_gate: baseline updated (ratio={m['ratio']:.3f}, "
-              f"fingerprint={m['fingerprint']})")
+              f"fingerprint={m['fingerprint']}, "
+              f"fleet placements={sorted(fleet)})")
         return 0
 
     try:
@@ -177,6 +214,25 @@ def main(argv=None) -> int:
         )
         return 1
 
+    base_fleet = base.get("fleet", {}).get("placements")
+    if base_fleet is None:
+        print("obs_gate: baseline has no fleet fingerprint; re-pin with "
+              "--update", file=sys.stderr)
+        return 2
+    if fleet != base_fleet:
+        drift = [p for p in sorted(set(fleet) | set(base_fleet))
+                 if fleet.get(p) != base_fleet.get(p)]
+        print(
+            "obs_gate: FLEET BEHAVIOR CHANGED — the 3-node density-9 "
+            f"sweep no longer matches the pinned fingerprint "
+            f"(placements drifted: {drift})\n"
+            f"  pinned:   { {p: base_fleet.get(p) for p in drift} }\n"
+            f"  measured: { {p: fleet.get(p) for p in drift} }\n"
+            "If intended, re-pin with: python scripts/obs_gate.py --update",
+            file=sys.stderr,
+        )
+        return 1
+
     slack = m["ratio"] / base["ratio"] - 1.0
     budget = tol + m["noise"]
     if slack > budget:
@@ -190,7 +246,8 @@ def main(argv=None) -> int:
         f"obs_gate: {status} sim={m['sim_s']*1e3:.0f}ms "
         f"calib={m['calib_s']*1e3:.0f}ms ratio={m['ratio']:.3f} "
         f"baseline={base['ratio']:.3f} delta={slack*100:+.1f}% "
-        f"(tol {tol*100:.0f}% + noise {m['noise']*100:.1f}%)"
+        f"(tol {tol*100:.0f}% + noise {m['noise']*100:.1f}%) "
+        f"fleet={len(fleet)} placements OK"
     )
     if slack > budget:
         print(

@@ -1,38 +1,37 @@
-"""Cluster consolidation study (paper §5.1, Fig 7).
+"""Cluster consolidation — compatibility shim over :mod:`repro.fleet`.
 
-A cluster of identical 12-HT worker nodes hosts ~800 function containers
-(Azure-2019 downscaled).  Baseline static reservation needs ``base_nodes``
-nodes to meet peak demand; we consolidate the same workload onto fewer nodes
-and find the smallest count per policy that preserves the SLO.  Nodes are
-statistically identical under banded round-robin placement, so one node is
-simulated per (n_nodes, policy) configuration and scaled — the same
-approximation is exercised against the multi-node exact path in tests.
+The consolidation study now lives in the placement-aware fleet layer
+(``repro.fleet.consolidate`` hosts the sweep and the min-nodes search;
+``repro.fleet.simulate`` runs real multi-node fleets, numpy or vmapped
+JAX).  This module keeps the historical entry points importable:
 
-The paper's headline: CFS needs 14 nodes; CFS-LAGS holds the same latency
-distribution on 10 (-28 %), raising safe utilisation from ~45 % to ~55 %.
+  * :func:`consolidation_sweep` / :func:`min_nodes_meeting_slo` /
+    :class:`ClusterResult` re-export the fleet implementations.
+  * :func:`simulate_node_share` / :func:`simulate_node_share_jax` remain
+    the legacy *single representative node* paths (one node simulated and
+    scaled).  Note their known approximation: the share split floors to
+    ``max(1, total_fns // n_nodes)``, dropping up to ``n_nodes - 1``
+    functions from the cluster total — fleet placements conserve the
+    function count instead (``repro.fleet.placement.Assignment`` asserts
+    it), and ``tests/test_fleet.py`` pins both behaviors.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List
-
 import numpy as np
 
-from repro.core.policies import make_policy
 from repro.core.simkernel import SimConfig, SimResult, simulate
 from repro.core.traces import make_workload
+from repro.core.policies import make_policy
+from repro.fleet.consolidate import (  # noqa: F401  (compat re-exports)
+    ClusterResult,
+    consolidation_sweep,
+    min_nodes_meeting_slo,
+)
 
-
-@dataclass
-class ClusterResult:
-    policy: str
-    n_nodes: int
-    p50: float
-    p95: float
-    thr_slo: float
-    util_effective: float
-    util_perceived: float
-    overhead_frac: float
+__all__ = [
+    "ClusterResult", "consolidation_sweep", "min_nodes_meeting_slo",
+    "simulate_node_share", "simulate_node_share_jax",
+]
 
 
 def simulate_node_share(
@@ -43,7 +42,14 @@ def simulate_node_share(
     n_cores: int = 12,
     seed: int = 7,
 ) -> SimResult:
-    """Simulate one representative node holding its share of the cluster."""
+    """Simulate one representative node holding its share of the cluster.
+
+    Legacy approximation (see module docstring): the per-node function
+    count floors, so the simulated cluster can under-count by up to
+    ``n_nodes - 1`` functions.  Use ``repro.fleet.simulate_fleet`` for the
+    conserving multi-node path; when ``total_fns`` divides evenly the two
+    agree exactly.
+    """
     fns_per_node = max(1, total_fns // n_nodes)
     wl = make_workload(
         "azure2021", fns_per_node, duration_s=duration_s, n_cores=n_cores,
@@ -72,7 +78,9 @@ def simulate_node_share_jax(
     ``vmap``-able across the (n_nodes, policy) grid on an accelerator.
     Returned as a :class:`SimResult` so the SLO search is backend-blind
     (the scan backend folds switch time into ``overhead_s``; discrete
-    switch counts stay numpy-only).
+    switch counts stay numpy-only).  ``repro.fleet.simulate_fleet`` with
+    ``backend="jax"`` batches *all* nodes of a configuration into one
+    vmapped scan instead of scaling this single node.
     """
     from repro.core import simkernel_jax as sj
     from repro.sched.jax_backend import CODE_OF
@@ -110,55 +118,3 @@ def simulate_node_share_jax(
         duration_s=duration_s,
         n_cores=n_cores,
     )
-
-
-def consolidation_sweep(
-    total_fns: int = 800,
-    node_counts=(15, 14, 12, 11, 10, 9, 8),
-    policies=("cfs", "lags"),
-    duration_s: float = 30.0,
-    slo_s: float = 1.0,
-    backend: str = "numpy",
-) -> List[ClusterResult]:
-    node_share = (
-        simulate_node_share if backend == "numpy" else simulate_node_share_jax
-    )
-    out = []
-    for pol in policies:
-        for n in node_counts:
-            r = node_share(pol, total_fns, n, duration_s)
-            out.append(
-                ClusterResult(
-                    policy=pol,
-                    n_nodes=n,
-                    p50=r.pct(50),
-                    p95=r.pct(95),
-                    thr_slo=r.throughput_slo(slo_s) * n,
-                    util_effective=r.util_effective,
-                    util_perceived=r.util_perceived,
-                    overhead_frac=r.overhead_frac,
-                )
-            )
-    return out
-
-
-def min_nodes_meeting_slo(
-    results: List[ClusterResult], policy: str, slo_s: float = 1.0,
-    tail_factor: float = 2.0, median_factor: float = 2.5,
-) -> int:
-    """Smallest node count preserving the over-provisioned baseline's latency
-    distribution (paper §5.1: consolidation must not degrade performance;
-    the reference is the static-reservation cluster at max node count).
-    Both the median and the p95 must stay within factor budgets — CFS shows
-    'up to 6x' median/tail inflation when pushed past its limit."""
-    base = [r for r in results if r.policy == policy]
-    n_max = max(r.n_nodes for r in base)
-    ref = min((r for r in results if r.n_nodes == n_max),
-              key=lambda r: r.p95)  # over-provisioned reference
-    p95_budget = max(tail_factor * ref.p95, slo_s)
-    p50_budget = max(median_factor * ref.p50, 0.6)
-    ok = [
-        r.n_nodes for r in base
-        if r.p95 <= p95_budget and r.p50 <= p50_budget
-    ]
-    return min(ok) if ok else n_max

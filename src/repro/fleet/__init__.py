@@ -1,0 +1,64 @@
+"""``repro.fleet`` — placement-aware multi-node cluster simulation.
+
+The orchestrator layer the paper's cluster study (§5.1, Fig 7) implies but
+the single-node simulators cannot express: *which functions land on which
+node* (placement), *what each node then pays* (per-node tick simulation
+through the ``repro.sched`` backends), and *what the fleet looks like as a
+whole* (merged observability, consolidation search).
+
+Quick start::
+
+    from repro.fleet import place, simulate_fleet, make_policy
+
+    asg = place("switch-aware", total_fns=800, n_nodes=10,
+                policy=make_policy("lags"))
+    fleet = simulate_fleet("lags", asg, duration_s=30.0)
+    print(fleet.pct(95), fleet.overhead_frac, fleet.imbalance())
+
+    # all nodes in one vmapped lax.scan (one compile per configuration):
+    fleet_jax = simulate_fleet("lags", asg, backend="jax")
+
+    # per-node run records + merged fleet view:
+    simulate_fleet("lags", asg, record_dir="/tmp/fleet")
+    #   python -m repro.obs.report --merge /tmp/fleet/node*
+
+Consolidation (the Fig 7 headline)::
+
+    from repro.fleet import consolidation_sweep, min_nodes_meeting_slo
+    res = consolidation_sweep(total_fns=800, node_counts=(14, 12, 10))
+    print(min_nodes_meeting_slo(res, "cfs"), min_nodes_meeting_slo(res, "lags"))
+
+Placement strategies (``repro.fleet.placement.PLACEMENTS``):
+``round-robin`` (band-striped, the paper's banded placement), ``pack``
+(first-fit decreasing by reserved share), ``spread`` (least-loaded), and
+``switch-aware`` (least load *plus* the policy's voluntary-switch overhead
+estimate, so dense cgroup stacking is penalised under CFS but tolerated
+under run-to-completion LAGS).  Every strategy conserves the function
+count — each global fn id is assigned to exactly one node.
+"""
+from repro.fleet.consolidate import (
+    CLUSTER_DURATION_S,
+    CLUSTER_EXEC_S,
+    ClusterResult,
+    cluster_result,
+    consolidation_sweep,
+    min_nodes_meeting_slo,
+    placement_comparison,
+)
+from repro.fleet.placement import (
+    PLACEMENTS,
+    Assignment,
+    fn_shares,
+    place,
+    switch_penalty,
+)
+from repro.fleet.simulate import FleetResult, record_fleet, simulate_fleet
+from repro.sched.numpy_backend import make_policy
+
+__all__ = [
+    "CLUSTER_DURATION_S", "CLUSTER_EXEC_S",
+    "PLACEMENTS", "Assignment", "ClusterResult", "FleetResult",
+    "cluster_result", "consolidation_sweep", "fn_shares", "make_policy",
+    "min_nodes_meeting_slo", "place", "placement_comparison", "record_fleet",
+    "simulate_fleet", "switch_penalty",
+]

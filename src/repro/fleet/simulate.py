@@ -1,0 +1,311 @@
+"""Multi-node fleet simulation over the ``repro.sched`` backends.
+
+Runs one tick simulation per fleet node under a placement
+(:class:`repro.fleet.placement.Assignment`) and aggregates the results:
+
+  * ``backend="numpy"`` — the exact per-node loop through
+    ``core.simkernel.simulate`` (float64 reference).  Nodes whose
+    (function count, seed) coincide share one simulation — under the
+    default shared seed, equal-count nodes are *statistically identical*
+    (the paper's banded-placement assumption), so a balanced fleet costs
+    one node-sim, not ``n_nodes``.
+  * ``backend="jax"`` — all nodes of a configuration batched into **one**
+    ``vmap``-ped ``lax.scan`` over ``core.simkernel_jax``: per-node slot
+    traces are padded to a common shape and stacked, so a 14-node sweep
+    costs a single compile and runs data-parallel on the accelerator.
+
+Per-node demand is regenerated from the band model at the node's assigned
+function count (``traces.make_workload``), which keeps the differential
+contract with the legacy representative-node path: a placement handing
+every node ``k`` functions reproduces ``simulate_node_share(policy, k*n,
+n)`` exactly (``tests/test_fleet.py``).  Pass ``distinct_seeds=True`` to
+decorrelate nodes instead.
+
+Fleet observability: ``record_dir`` makes every simulated node emit a run
+record (``node<i>/run.json``); render the merged fleet view with
+
+  python -m repro.obs.report --merge RECORD_DIR/node*
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.simkernel import SimConfig, SimResult, simulate
+from repro.core.traces import make_workload
+from repro.fleet.placement import Assignment
+from repro.obs.schedstats import SchedStats
+from repro.sched.numpy_backend import make_policy
+
+
+@dataclass
+class FleetResult:
+    """Aggregated fleet run: one :class:`SimResult` per node."""
+
+    policy: str
+    placement: str
+    nodes: List[SimResult]
+    counts: np.ndarray  # per-node function counts
+    duration_s: float
+    n_cores: int
+    backend: str = "numpy"
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def latencies(self) -> np.ndarray:
+        xs = [r.latencies for r in self.nodes if len(r.latencies)]
+        return np.concatenate(xs) if xs else np.empty(0)
+
+    @property
+    def n_arrived(self) -> int:
+        return sum(r.n_arrived for r in self.nodes)
+
+    @property
+    def n_completed(self) -> int:
+        return sum(r.n_completed for r in self.nodes)
+
+    def pct(self, q: float) -> float:
+        lat = self.latencies
+        return float(np.percentile(lat, q)) if len(lat) else float("nan")
+
+    def throughput_slo(self, slo: float = 1.0) -> float:
+        return float(np.sum(self.latencies <= slo)) / self.duration_s
+
+    @property
+    def util_effective(self) -> float:
+        cap = self.n_nodes * self.n_cores * self.duration_s
+        return sum(r.busy_time_s for r in self.nodes) / cap
+
+    @property
+    def util_perceived(self) -> float:
+        cap = self.n_nodes * self.n_cores * self.duration_s
+        return sum(r.busy_time_s + r.switch_time_s for r in self.nodes) / cap
+
+    @property
+    def overhead_frac(self) -> float:
+        cap = self.n_nodes * self.n_cores * self.duration_s
+        return sum(r.switch_time_s for r in self.nodes) / cap
+
+    # -- fleet observability ------------------------------------------------
+    def node_p95s(self) -> np.ndarray:
+        return np.asarray([r.pct(95) for r in self.nodes])
+
+    def imbalance(self) -> dict:
+        """Per-node load-imbalance report: p95 spread across nodes and the
+        max/mean overhead-fraction ratio (1.0 = perfectly balanced)."""
+        p95 = self.node_p95s()
+        ovh = np.asarray([r.overhead_frac for r in self.nodes])
+        ok = p95 == p95  # drop NaN (empty nodes)
+        return {
+            "p95_min": float(p95[ok].min()) if ok.any() else float("nan"),
+            "p95_max": float(p95[ok].max()) if ok.any() else float("nan"),
+            "p95_spread": (
+                float(p95[ok].max() - p95[ok].min()) if ok.any()
+                else float("nan")
+            ),
+            "ovh_max_over_mean": float(
+                ovh.max() / max(ovh.mean(), 1e-12)
+            ),
+        }
+
+    def merged_sched(self) -> SchedStats:
+        """One fleet-wide :class:`SchedStats` (entity stats summed)."""
+        out = SchedStats(f"fleet.{self.policy}.{self.placement}")
+        for r in self.nodes:
+            out.merge(r.sched_summary())
+        return out
+
+
+def _empty_node(policy_name: str, duration_s: float, n_cores: int,
+                backend: str) -> SimResult:
+    """A node the placement left idle (``pack`` drains the tail nodes)."""
+    return SimResult(
+        policy=policy_name, latencies=np.empty(0),
+        fn_of=np.empty(0, np.int64), arrival_of=np.empty(0),
+        n_arrived=0, n_completed=0, switches=0, switch_time_s=0.0,
+        busy_time_s=0.0, duration_s=duration_s, n_cores=n_cores,
+    )
+
+
+def _node_sim_numpy(policy_name: str, n_fns: int, duration_s: float,
+                    n_cores: int, seed: int, exec_s: float,
+                    threads_per_fn: int) -> SimResult:
+    wl = make_workload(
+        "azure2021", n_fns, duration_s=duration_s, n_cores=n_cores,
+        seed=seed, exec_s=exec_s,
+        threads_per_fn=threads_per_fn,
+    )
+    return simulate(
+        wl, make_policy(policy_name),
+        SimConfig(n_cores=n_cores, hierarchy_depth=5.0, burst_us=280.0,
+                  seed=seed),
+    )
+
+
+def _pad_trace(trace, T: int, R: int):
+    """Pad a SlotTrace to (T, R) with never-arriving requests.
+
+    Padding slots carry the sentinel arrival (never runnable) and fn id 0
+    (never dispatched, so the mapping is inert); the scan result over a
+    padded trace is bit-identical to the unpadded one.
+    """
+    import jax.numpy as jnp
+
+    BIG = np.iinfo(np.int32).max // 2
+    at = np.full((T, R), BIG, np.int32)
+    de = np.zeros((T, R), np.float32)
+    fn = np.zeros(T, np.int32)
+    t0, r0 = trace.arrival_tick.shape
+    at[:t0, :r0] = np.asarray(trace.arrival_tick)
+    de[:t0, :r0] = np.asarray(trace.demand)
+    fn[:t0] = np.asarray(trace.slot_fn)
+    return type(trace)(jnp.asarray(at), jnp.asarray(de), jnp.asarray(fn))
+
+
+def _fleet_sim_jax(policy_name: str, counts: np.ndarray, duration_s: float,
+                   n_cores: int, seeds: List[int], exec_s: float,
+                   threads_per_fn: int) -> List[SimResult]:
+    """All nodes of one configuration in a single vmapped ``lax.scan``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import simkernel_jax as sj
+    from repro.sched.jax_backend import CODE_OF
+
+    traces = []
+    for k, seed in zip(counts, seeds):
+        wl = make_workload(
+            "azure2021", int(k), duration_s=duration_s, n_cores=n_cores,
+            seed=seed, exec_s=exec_s, threads_per_fn=threads_per_fn,
+        )
+        traces.append(sj.build_slot_trace(wl, int(k), threads_per_fn))
+    max_fns = int(max(counts))
+    T = max_fns * threads_per_fn
+    R = max(int(t.arrival_tick.shape[1]) for t in traces)
+    padded = [_pad_trace(t, T, R) for t in traces]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *padded
+    )
+    p = sj.SimParams(
+        n_cores=n_cores, n_fns=max_fns,
+        n_ticks=int(duration_s / sj.TICK), policy=CODE_OF[policy_name],
+        burst_us=280.0, depth=5.0,
+    )
+    out = jax.vmap(lambda t: sj.simulate(t, p))(stacked)
+
+    results = []
+    BIG = np.iinfo(np.int32).max // 2
+    for i, trace in enumerate(padded):
+        done = np.asarray(out["done_tick"][i])
+        lat = sj.latencies_from(trace, done)
+        at = np.asarray(trace.arrival_tick)
+        ok = (done >= 0) & (at < BIG)
+        fn_of = np.broadcast_to(
+            np.asarray(trace.slot_fn)[:, None], at.shape
+        )[ok]
+        results.append(SimResult(
+            policy=policy_name,
+            latencies=lat,
+            fn_of=fn_of,
+            arrival_of=at[ok] * sj.TICK,
+            n_arrived=int((at < BIG).sum()),
+            n_completed=len(lat),
+            switches=0,
+            switch_time_s=float(out["overhead_s"][i]),
+            busy_time_s=float(out["busy_s"][i]),
+            duration_s=duration_s,
+            n_cores=n_cores,
+        ))
+    return results
+
+
+def simulate_fleet(
+    policy_name: str,
+    assignment: Assignment,
+    duration_s: float = 30.0,
+    n_cores: int = 12,
+    seed: int = 7,
+    exec_s: float = 0.2,
+    backend: str = "numpy",
+    distinct_seeds: bool = False,
+    threads_per_fn: int = 0,
+    record_dir: Optional[str] = None,
+) -> FleetResult:
+    """Simulate every node of a placed fleet; see the module docstring."""
+    counts = assignment.counts
+    assert int(counts.sum()) == int(assignment.shares.shape[0]), (
+        "placement dropped functions"  # Assignment already guards this
+    )
+    seeds = [seed + i if distinct_seeds else seed
+             for i in range(assignment.n_nodes)]
+    live = [(i, int(k)) for i, k in enumerate(counts) if k > 0]
+    if backend == "jax":
+        tpf = threads_per_fn or 8
+        sims = _fleet_sim_jax(
+            policy_name, np.asarray([k for _, k in live]), duration_s,
+            n_cores, [seeds[i] for i, _ in live], exec_s, tpf,
+        )
+        by_node = {i: r for (i, _), r in zip(live, sims)}
+    elif backend == "numpy":
+        tpf = threads_per_fn or 192
+        cache: Dict[Tuple[int, int], SimResult] = {}
+        by_node = {}
+        for i, k in live:
+            key = (k, int(seeds[i]))
+            if key not in cache:
+                cache[key] = _node_sim_numpy(
+                    policy_name, k, duration_s, n_cores, int(seeds[i]),
+                    exec_s, tpf,
+                )
+            by_node[i] = cache[key]
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    nodes = [
+        by_node.get(i) or _empty_node(policy_name, duration_s, n_cores,
+                                      backend)
+        for i in range(assignment.n_nodes)
+    ]
+
+    fleet = FleetResult(
+        policy=policy_name,
+        placement=assignment.placement,
+        nodes=nodes,
+        counts=counts,
+        duration_s=duration_s,
+        n_cores=n_cores,
+        backend=backend,
+    )
+    if record_dir:
+        record_fleet(fleet, record_dir)
+    return fleet
+
+
+def record_fleet(fleet: FleetResult, out_dir: str) -> List[str]:
+    """Emit one run record per simulated node (``node<i>/run.json``).
+
+    Uses each node's ``sched_summary()`` so records exist telemetry-on or
+    -off; merge them back into one fleet view with
+    ``python -m repro.obs.report --merge out_dir/node*``.
+    """
+    from repro.obs.recorder import record_run
+
+    paths = []
+    for i, r in enumerate(fleet.nodes):
+        paths.append(record_run(
+            os.path.join(out_dir, f"node{i}"),
+            meta={
+                "layer": "fleet", "policy": fleet.policy,
+                "placement": fleet.placement, "node": i,
+                "n_nodes": fleet.n_nodes, "n_fns": int(fleet.counts[i]),
+                "duration_s": fleet.duration_s, "backend": fleet.backend,
+            },
+            sched=r.sched_summary(),
+            include_registry=False,
+        ))
+    return paths

@@ -14,6 +14,16 @@ file (open in Perfetto).  Compare policies with
   python -m repro.launch.serve --policy lags --obs-dir /tmp/r/lags
   python -m repro.launch.serve --policy fair --obs-dir /tmp/r/fair
   python -m repro.obs.report --diff /tmp/r/fair /tmp/r/lags
+
+Long runs can be *watched live*: ``--checkpoint-every S`` rewrites the run
+record every S sim-seconds, so ``python -m repro.obs.report DIR`` in
+another shell always renders the latest snapshot.  Multiple engine shards
+merge post-hoc into one fleet view:
+
+  python -m repro.launch.serve --policy lags --shard s0 --obs-dir /tmp/f/s0
+  python -m repro.launch.serve --policy lags --shard s1 --seed 1 \
+      --obs-dir /tmp/f/s1
+  python -m repro.obs.report --merge /tmp/f/s0 /tmp/f/s1
 """
 from __future__ import annotations
 
@@ -70,6 +80,13 @@ def main(argv=None):
                     help="record schedstats/metrics run record here")
     ap.add_argument("--trace", action="store_true",
                     help="capture a Chrome trace (needs --obs-dir to persist)")
+    ap.add_argument("--checkpoint-every", type=float, default=0.0,
+                    metavar="S",
+                    help="stream live schedstats: rewrite the run record "
+                         "every S sim-seconds (needs --obs-dir)")
+    ap.add_argument("--shard", default="",
+                    help="shard label recorded in the run meta, for "
+                         "post-hoc `report --merge` of parallel shards")
     args = ap.parse_args(argv)
 
     if args.obs_dir or args.trace:
@@ -95,7 +112,34 @@ def main(argv=None):
         params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
         eng.attach_model(cfg, params, max_len=64)
 
-    st = eng.run(args.duration, arrivals)
+    meta = {
+        "layer": "serving", "policy": args.policy,
+        "tenants": args.tenants, "duration_s": args.duration,
+        "slots": args.slots, "seed": args.seed,
+        "arrivals": len(arrivals),
+    }
+    if args.shard:
+        meta["shard"] = args.shard
+
+    n_ckpt = 0
+
+    def _checkpoint(stats):
+        # live schedstats stream: rewrite the run record in place so a
+        # concurrent `repro.obs.report` sees the latest partial totals
+        nonlocal n_ckpt
+        n_ckpt += 1
+        record_run(
+            args.obs_dir,
+            meta={**meta, "checkpoint": n_ckpt,
+                  "progress_s": round(stats.time_s, 3), "live": True},
+            sched=stats.sched,
+        )
+
+    st = eng.run(
+        args.duration, arrivals,
+        checkpoint_every_s=args.checkpoint_every if args.obs_dir else 0.0,
+        on_checkpoint=_checkpoint if args.obs_dir else None,
+    )
     lat = np.asarray([r.latency for r in st.completed])
     print(
         f"policy={args.policy} completed={len(st.completed)}/{len(arrivals)} "
@@ -103,16 +147,12 @@ def main(argv=None):
         f"p95={np.percentile(lat, 95) if len(lat) else -1:.2f}s "
         f"switch_overhead={st.overhead_frac*100:.1f}% "
         f"membership_changes={st.membership_changes}"
+        + (f" checkpoints={n_ckpt}" if n_ckpt else "")
     )
     if args.obs_dir:
         path = record_run(
             args.obs_dir,
-            meta={
-                "layer": "serving", "policy": args.policy,
-                "tenants": args.tenants, "duration_s": args.duration,
-                "slots": args.slots, "seed": args.seed,
-                "arrivals": len(arrivals),
-            },
+            meta={**meta, "checkpoints": n_ckpt} if n_ckpt else meta,
             sched=st.sched,
         )
         print(f"run record -> {path}")

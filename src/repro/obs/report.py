@@ -1,12 +1,19 @@
-"""Run summaries and run-vs-run diffs over recorded telemetry.
+"""Run summaries, run-vs-run diffs and fleet merges over recorded telemetry.
 
   PYTHONPATH=src python -m repro.obs.report RUNDIR            # summarize
   PYTHONPATH=src python -m repro.obs.report --diff A B        # compare runs
   PYTHONPATH=src python -m repro.obs.report RUNDIR --top 5    # busiest tenants
+  PYTHONPATH=src python -m repro.obs.report --merge D1 D2 ... # one fleet view
 
 The diff is the paper's evaluation loop in one command: record a lags run
 and a fair run of ``launch/serve.py`` (``--obs-dir``), then diff them to get
 per-policy switch-time share, switch rate/cost, and latency-tail deltas.
+
+``--merge`` folds many per-node / per-shard run records (fleet node
+records from ``repro.fleet.simulate_fleet(record_dir=...)``, or several
+``launch/serve.py --obs-dir`` shards) into a single fleet view: totals and
+per-entity stats summed, histograms merged bucket-wise, plus a per-shard
+breakdown table.
 """
 from __future__ import annotations
 
@@ -87,6 +94,44 @@ def summarize(run: dict, top: int = 0) -> str:
     return "\n".join(out)
 
 
+def merge(runs: List[dict]) -> str:
+    """One fleet view over many per-node/per-shard run records."""
+    scheds = [r.get("sched") for r in runs]
+    missing = [r.get("path", "?") for r, s in zip(runs, scheds) if s is None]
+    if missing:
+        return f"merge requires schedstats in every run; missing in {missing}"
+    merged = SchedStats.merged(scheds)
+    metas = [r.get("meta", {}) for r in runs]
+    policies = sorted({str(m.get("policy")) for m in metas if "policy" in m})
+    head = [f"fleet view: {len(runs)} run records merged"]
+    if policies:
+        head.append(f"policies: {', '.join(policies)}")
+    srows = []
+    for r, s, m in zip(runs, scheds, metas):
+        label = str(
+            m.get("shard", m.get("node", os.path.basename(
+                os.path.dirname(r.get("path", "run")))))
+        )
+        srows.append([
+            label, str(m.get("policy", "-")), _fmt(s.time_s, "s"),
+            _fmt(s.switch_share, "%"), _fmt(s.latency.pct(95), "s"),
+            _fmt(s.latency.count),
+        ])
+    out = [
+        " | ".join(head),
+        "",
+        "per-shard:",
+        _table(["shard", "policy", "time_s", "switch_share", "p95_latency",
+                "completed"], srows),
+        "",
+        "merged:",
+        _table(["metric", "value"],
+               [[name, _fmt(val, unit)]
+                for name, val, unit in _key_rows(merged)]),
+    ]
+    return "\n".join(out)
+
+
 def diff(run_a: dict, run_b: dict) -> str:
     """Side-by-side comparison; delta column is B - A (negative = B lower)."""
     sa, sb = run_a.get("sched"), run_b.get("sched")
@@ -118,9 +163,13 @@ def main(argv=None) -> str:
     ap.add_argument("runs", nargs="*", help="run dir(s) or run.json path(s)")
     ap.add_argument("--diff", action="store_true",
                     help="compare exactly two runs (delta = second - first)")
+    ap.add_argument("--merge", action="store_true",
+                    help="merge all given runs into one fleet view")
     ap.add_argument("--top", type=int, default=0,
                     help="also list the N busiest entities (summary mode)")
     args = ap.parse_args(argv)
+    if args.diff and args.merge:
+        ap.error("--diff and --merge are mutually exclusive")
 
     def _load(path):
         try:
@@ -135,6 +184,10 @@ def main(argv=None) -> str:
         if len(args.runs) != 2:
             ap.error("--diff takes exactly two run paths")
         text = diff(_load(args.runs[0]), _load(args.runs[1]))
+    elif args.merge:
+        if len(args.runs) < 2:
+            ap.error("--merge takes at least two run paths")
+        text = merge([_load(p) for p in args.runs])
     else:
         if not args.runs:
             ap.error("give at least one run path")

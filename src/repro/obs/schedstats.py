@@ -33,6 +33,17 @@ class EntityStats:
     arrived: int = 0
     completed: int = 0
 
+    def merge(self, other: "EntityStats") -> "EntityStats":
+        self.useful_s += other.useful_s
+        self.switch_s += other.switch_s
+        self.switches += other.switches
+        self.same_group_switches += other.same_group_switches
+        self.run_delay_s += other.run_delay_s
+        self.runs += other.runs
+        self.arrived += other.arrived
+        self.completed += other.completed
+        return self
+
     def to_dict(self) -> dict:
         return {
             "useful_s": self.useful_s,
@@ -141,6 +152,49 @@ class SchedStats:
 
     def runq_peak(self) -> float:
         return max((d for _, d in self.runq_timeline), default=0.0)
+
+    # -- aggregation -------------------------------------------------------
+    def merge(self, other: "SchedStats") -> "SchedStats":
+        """Fold another run's accounting into this one (fleet aggregation).
+
+        Totals and per-entity stats sum; histograms merge bucket-wise
+        (``Histogram.merge``).  Entity ids are summed by key — for fleet
+        nodes these are per-node function ids, i.e. function *classes*
+        under the banded placement; for serve shards they are global
+        tenant ids.  ``time_s`` sums too: for parallel shards the merged
+        view accounts aggregate shard-seconds, which keeps the
+        conservation identity (``useful + switch + idle == time``) and
+        makes ``switch_share`` the fleet-wide share.
+        """
+        self.time_s += other.time_s
+        self.idle_s += other.idle_s
+        self.useful_s += other.useful_s
+        self.switch_s += other.switch_s
+        self.switches += other.switches
+        self.capacity_s += other.capacity_s
+        self.switch_cost_us.merge(other.switch_cost_us)
+        self.run_delay.merge(other.run_delay)
+        self.latency.merge(other.latency)
+        for k, e in other.entities.items():
+            self._ent(k).merge(e)
+        if other.runq_timeline:
+            tl = sorted(self.runq_timeline + other.runq_timeline)
+            while len(tl) >= _TIMELINE_CAP:
+                tl = tl[::2]
+            self.runq_timeline = tl
+        if not self.name:
+            self.name = other.name
+        elif other.name and other.name != self.name:
+            self.name = f"{self.name}+{other.name}"
+        return self
+
+    @classmethod
+    def merged(cls, stats, name: str = "") -> "SchedStats":
+        """One fleet-wide view from an iterable of per-shard stats."""
+        out = cls(name)
+        for st in stats:
+            out.merge(st)
+        return out
 
     # -- (de)serialization -------------------------------------------------
     def snapshot(self) -> dict:

@@ -337,13 +337,29 @@ class Engine:
         self._tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         self._cache_len += 1
 
-    def run(self, until_s: float, arrivals: Optional[List[Request]] = None):
-        """Drive the engine until ``until_s`` sim-seconds, feeding arrivals."""
+    def run(self, until_s: float, arrivals: Optional[List[Request]] = None,
+            checkpoint_every_s: float = 0.0, on_checkpoint=None):
+        """Drive the engine until ``until_s`` sim-seconds, feeding arrivals.
+
+        ``on_checkpoint(stats)`` fires every ``checkpoint_every_s``
+        sim-seconds (when both are given) so a live run can stream
+        schedstats snapshots — e.g. periodic ``record_run`` checkpoints a
+        ``repro.obs.report`` invocation can watch while the run is going.
+        """
         arrivals = sorted(arrivals or [], key=lambda r: r.arrival)
         ai = 0
+        next_ckpt = (
+            checkpoint_every_s
+            if checkpoint_every_s > 0 and on_checkpoint is not None
+            else float("inf")
+        )
         while self.stats.time_s < until_s:
             while ai < len(arrivals) and arrivals[ai].arrival <= self.stats.time_s:
                 self.submit(arrivals[ai])
                 ai += 1
             self.step()
+            if self.stats.time_s >= next_ckpt:
+                on_checkpoint(self.stats)
+                while next_ckpt <= self.stats.time_s:
+                    next_ckpt += checkpoint_every_s
         return self.stats
