@@ -58,4 +58,29 @@ PY
 python -m repro.obs.report --merge "$tmp/fleet/node0" "$tmp/fleet/node1"
 
 echo
+echo "== chaos smoke: 2-node fleet, scripted mid-run crash, failover report =="
+python - "$tmp/chaos" <<'PY'
+import sys
+from repro.fleet import FaultSchedule, place, simulate_fleet_chaos
+asg = place("spread", 24, 2, exec_s=0.1)
+res = simulate_fleet_chaos(
+    "lags", asg, FaultSchedule.single_crash(1, 3.0, 2),
+    duration_s=9.0, epoch_s=1.5, exec_s=0.1, seed=10,
+    record_dir=sys.argv[1],
+)
+assert res.per_epoch_counts()[-1][1] == 0, "crashed node not drained"
+assert res.recovery_s()[1] is not None, "fleet never recovered"
+print(f"chaos OK: {len(res.migrations)} migrations, "
+      f"{res.n_completed} completed, recovery_s={res.recovery_s()[1]}")
+PY
+merged="$(python -m repro.obs.report --merge "$tmp/chaos" \
+    "$tmp/chaos/node0" "$tmp/chaos/node1")"
+echo "$merged"
+case "$merged" in
+  *failover:*) ;;
+  *) echo "chaos smoke: merged report is missing the failover section" >&2
+     exit 1 ;;
+esac
+
+echo
 echo "check.sh: all good"

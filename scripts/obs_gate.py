@@ -122,6 +122,40 @@ def fleet_fingerprint():
     return fp
 
 
+CHAOS_NODES = 2
+CHAOS_FNS = 24
+CHAOS_DUR_S = 9.0
+CHAOS_EPOCH_S = 1.5
+CHAOS_CRASH_NODE = 1
+CHAOS_CRASH_T = 3.0
+CHAOS_SEED = 10
+
+
+def chaos_fingerprint():
+    """Deterministic failover run (behavior, not timing): a 2-node fleet
+    with a scripted mid-run crash must keep re-placing, charging and
+    replaying exactly the same way — per-epoch node counts, migration
+    count and completions are pinned."""
+    from repro.fleet import FaultSchedule, place, simulate_fleet_chaos
+
+    asg = place("spread", CHAOS_FNS, CHAOS_NODES, n_cores=N_CORES,
+                exec_s=0.1)
+    res = simulate_fleet_chaos(
+        "lags", asg,
+        FaultSchedule.single_crash(CHAOS_CRASH_NODE, CHAOS_CRASH_T,
+                                   CHAOS_NODES),
+        duration_s=CHAOS_DUR_S, epoch_s=CHAOS_EPOCH_S, n_cores=N_CORES,
+        seed=CHAOS_SEED, exec_s=0.1,
+    )
+    return {
+        "per_epoch_counts": res.per_epoch_counts(),
+        "migrations": len(res.migrations),
+        "completed": int(res.n_completed),
+        "stranded": int(res.stranded_arrivals),
+        "replayed": int(res.replayed_arrivals),
+    }
+
+
 def measure():
     from repro.obs import metrics
 
@@ -172,6 +206,7 @@ def main(argv=None) -> int:
 
     m = measure_best()
     fleet = fleet_fingerprint()
+    chaos = chaos_fingerprint()
     if args.update:
         with open(BASELINE, "w") as f:
             json.dump(
@@ -186,6 +221,7 @@ def main(argv=None) -> int:
                         "duration_s": FLEET_DUR_S,
                         "placements": fleet,
                     },
+                    "chaos": chaos,
                 },
                 f, indent=2,
             )
@@ -233,6 +269,25 @@ def main(argv=None) -> int:
         )
         return 1
 
+    base_chaos = base.get("chaos")
+    if base_chaos is None:
+        print("obs_gate: baseline has no chaos fingerprint; re-pin with "
+              "--update", file=sys.stderr)
+        return 2
+    if chaos != base_chaos:
+        drift = [k for k in sorted(set(chaos) | set(base_chaos))
+                 if chaos.get(k) != base_chaos.get(k)]
+        print(
+            "obs_gate: FAILOVER BEHAVIOR CHANGED — the scripted 2-node "
+            f"crash run no longer matches the pinned fingerprint "
+            f"(drifted: {drift})\n"
+            f"  pinned:   { {k: base_chaos.get(k) for k in drift} }\n"
+            f"  measured: { {k: chaos.get(k) for k in drift} }\n"
+            "If intended, re-pin with: python scripts/obs_gate.py --update",
+            file=sys.stderr,
+        )
+        return 1
+
     slack = m["ratio"] / base["ratio"] - 1.0
     budget = tol + m["noise"]
     if slack > budget:
@@ -247,7 +302,7 @@ def main(argv=None) -> int:
         f"calib={m['calib_s']*1e3:.0f}ms ratio={m['ratio']:.3f} "
         f"baseline={base['ratio']:.3f} delta={slack*100:+.1f}% "
         f"(tol {tol*100:.0f}% + noise {m['noise']*100:.1f}%) "
-        f"fleet={len(fleet)} placements OK"
+        f"fleet={len(fleet)} placements OK, failover fingerprint OK"
     )
     if slack > budget:
         print(

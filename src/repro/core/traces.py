@@ -88,8 +88,40 @@ def make_workload(
     seed: int = 0,
     threads_per_fn: int = 0,
     exec_s: float = MEAN_EXEC_S,
+    rates: np.ndarray = None,
+    fn_ids: np.ndarray = None,
+    extra: np.ndarray = None,
 ) -> Workload:
+    """Synthesise a workload; see the module docstring.
+
+    ``rates`` (azure2021 only) overrides the band-model draw with explicit
+    per-function request rates — used by the fleet chaos layer, where a
+    node's offered load must follow the *actual functions assigned to it*
+    (regenerating by count alone loses the heavy-band demand mass of
+    migrated functions).
+
+    ``fn_ids`` (with ``rates``) draws each function's arrival stream from
+    its own generator keyed on ``(seed, global fn id)`` instead of one
+    shared stream.  These are common random numbers across placements: a
+    function keeps the *same* arrival realization no matter which node it
+    sits on, so comparing a rebalanced fleet against a fault-free
+    reference measures failover cost, not workload-redraw noise.
+
+    ``extra`` (with ``rates``) adds exactly ``extra[f]`` additional
+    arrivals per function, spread uniformly over the window.  This is the
+    replay channel for *known pending requests* (a failover retry backlog,
+    work carried over an epoch boundary): feeding a backlog through the
+    MMPP as added rate would realize with burst-modulated variance — a
+    replayed backlog could draw several times its mass, or almost none —
+    so replays inject by count, not by rate.
+    """
     rng = np.random.default_rng(seed)
+    if rates is not None and kind != "azure2021":
+        raise ValueError("explicit rates are only supported for azure2021")
+    if fn_ids is not None and rates is None:
+        raise ValueError("fn_ids requires explicit rates")
+    if extra is not None and rates is None:
+        raise ValueError("extra arrivals require explicit rates")
     arrivals, service = [], []
     # Open-loop serverless functions spawn a handler thread per invocation
     # (paper §3: unlike resctl, azure2021 does not limit contending threads —
@@ -99,9 +131,30 @@ def make_workload(
         threads_per_fn = 4 if kind.startswith("resctl") else 192
 
     if kind == "azure2021":
-        rates = fn_rates(n_fns, n_cores, seed)
+        if rates is None:
+            rates = fn_rates(n_fns, n_cores, seed)
+        else:
+            rates = np.asarray(rates, float)
+            assert rates.shape == (n_fns,), (
+                f"rates must have one entry per function: "
+                f"{rates.shape} != ({n_fns},)")
+        if fn_ids is not None:
+            fn_ids = np.asarray(fn_ids, np.int64)
+            assert fn_ids.shape == (n_fns,), (
+                f"fn_ids must have one entry per function: "
+                f"{fn_ids.shape} != ({n_fns},)")
+        if extra is not None:
+            extra = np.asarray(extra, np.int64)
+            assert extra.shape == (n_fns,), (
+                f"extra must have one entry per function: "
+                f"{extra.shape} != ({n_fns},)")
         for f in range(n_fns):
-            a = _mmpp_arrivals(rates[f], duration_s, rng)
+            rf = (rng if fn_ids is None
+                  else np.random.default_rng((seed, int(fn_ids[f]))))
+            a = _mmpp_arrivals(rates[f], duration_s, rf)
+            if extra is not None and extra[f] > 0:
+                replay = rf.uniform(0.0, duration_s, int(extra[f]))
+                a = np.sort(np.concatenate([a, replay]))
             arrivals.append(a)
             service.append(np.full(len(a), exec_s))
         return Workload(n_fns, arrivals, service, threads_per_fn, duration_s=duration_s)

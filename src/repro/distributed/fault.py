@@ -24,18 +24,36 @@ from typing import Dict, List, Optional, Tuple
 class HealthTracker:
     n_hosts: int
     timeout_s: float = 60.0
+    # a freshly registered host gets this long to send its *first* heartbeat
+    # before it can be declared failed (it used to be failed from t=0: the
+    # old ``last_seen`` default of -1e18 made every never-heartbeated host
+    # exceed the timeout immediately).  ``None`` means "same as timeout_s".
+    grace_s: Optional[float] = None
     last_seen: Dict[int, float] = field(default_factory=dict)
+    registered_at: Dict[int, float] = field(default_factory=dict)
+
+    def register(self, host: int, now: Optional[float] = None):
+        """Start the grace window for a host that has not heartbeated yet."""
+        self.registered_at[host] = time.monotonic() if now is None else now
 
     def heartbeat(self, host: int, now: Optional[float] = None):
         self.last_seen[host] = time.monotonic() if now is None else now
 
     def failed_hosts(self, now: Optional[float] = None) -> List[int]:
         now = time.monotonic() if now is None else now
-        return [
-            h
-            for h in range(self.n_hosts)
-            if now - self.last_seen.get(h, -1e18) > self.timeout_s
-        ]
+        grace = self.timeout_s if self.grace_s is None else self.grace_s
+        out = []
+        for h in range(self.n_hosts):
+            seen = self.last_seen.get(h)
+            if seen is not None:
+                if now - seen > self.timeout_s:
+                    out.append(h)
+            else:
+                # never heartbeated: failed only once the registration grace
+                # expires (unregistered hosts date from t=0)
+                if now - self.registered_at.get(h, 0.0) > grace:
+                    out.append(h)
+        return out
 
     def healthy_hosts(self, now: Optional[float] = None) -> List[int]:
         bad = set(self.failed_hosts(now))
@@ -74,22 +92,47 @@ class StragglerWatchdog:
     alpha: float = 0.1
     k_sigma: float = 3.0
     warmup: int = 8
+    # a host is flagged only when its step time ALSO exceeds this multiple
+    # of the fleet mean: the k-sigma test alone misfires on heterogeneous
+    # fleets (per-host EWMA variance can be tiny while host means honestly
+    # differ by tens of percent), and one false flag drains a healthy host
+    min_ratio: float = 2.0
+    # weight applied to the EWMA update of a sample that was *flagged* as a
+    # straggler.  Flagged samples used to feed back at full weight into the
+    # host's own mean/var (and hence the fleet mean), so a persistent 3x
+    # straggler raised its own baseline until it looked normal again; 0.0
+    # excludes flagged samples entirely, small values down-weight them.
+    flagged_weight: float = 0.0
+    # consecutive suspect observations required before ``observe`` reports
+    # a straggler.  A single sample cannot separate a genuinely slow host
+    # from a transient spike in the observable (e.g. an epoched observer's
+    # busy/completed ratio right after a burst leaves censored in-flight
+    # work) — a real slowdown persists, a spike does not, and one false
+    # flag drains a healthy host.
+    persist: int = 2
     mean: Dict[int, float] = field(default_factory=dict)
     var: Dict[int, float] = field(default_factory=dict)
     count: Dict[int, int] = field(default_factory=dict)
+    streak: Dict[int, int] = field(default_factory=dict)
 
     def observe(self, host: int, step_s: float) -> bool:
         """Record a step time; returns True if host is now a straggler."""
         m = self.mean.get(host, step_s)
         v = self.var.get(host, 0.0)
         self.count[host] = self.count.get(host, 0) + 1
-        is_straggler = False
+        suspect = False
         if self.count[host] > self.warmup:
             sigma = max(v, 1e-12) ** 0.5
             fleet_mean = sum(self.mean.values()) / max(len(self.mean), 1)
-            if step_s > fleet_mean + self.k_sigma * max(sigma, 0.05 * fleet_mean):
-                is_straggler = True
+            if (step_s > fleet_mean * self.min_ratio
+                    and step_s > fleet_mean
+                    + self.k_sigma * max(sigma, 0.05 * fleet_mean)):
+                suspect = True
+        # suspect samples stay out of the baseline even while debouncing,
+        # else a real straggler would normalise itself before persisting
+        a = self.alpha * (self.flagged_weight if suspect else 1.0)
         d = step_s - m
-        self.mean[host] = m + self.alpha * d
-        self.var[host] = (1 - self.alpha) * (v + self.alpha * d * d)
-        return is_straggler
+        self.mean[host] = m + a * d
+        self.var[host] = (1 - a) * (v + a * d * d)
+        self.streak[host] = self.streak.get(host, 0) + 1 if suspect else 0
+        return suspect and self.streak[host] >= self.persist

@@ -22,6 +22,14 @@ Quick start::
     simulate_fleet("lags", asg, record_dir="/tmp/fleet")
     #   python -m repro.obs.report --merge /tmp/fleet/node*
 
+Chaos / failover (fault injection + mid-run rebalancing)::
+
+    from repro.fleet import FaultSchedule, simulate_fleet_chaos
+    sched = FaultSchedule.single_crash(node=3, t=20.0, n_nodes=10)
+    res = simulate_fleet_chaos("lags", asg, sched, duration_s=60.0,
+                               epoch_s=5.0)
+    print(res.done_ratio, res.recovery_s(), len(res.migrations))
+
 Consolidation (the Fig 7 headline)::
 
     from repro.fleet import consolidation_sweep, min_nodes_meeting_slo
@@ -36,6 +44,7 @@ estimate, so dense cgroup stacking is penalised under CFS but tolerated
 under run-to-completion LAGS).  Every strategy conserves the function
 count — each global fn id is assigned to exactly one node.
 """
+from repro.fleet.chaos import FLEET, FaultEvent, FaultSchedule, NodeState
 from repro.fleet.consolidate import (
     CLUSTER_DURATION_S,
     CLUSTER_EXEC_S,
@@ -52,13 +61,22 @@ from repro.fleet.placement import (
     place,
     switch_penalty,
 )
+from repro.fleet.rebalance import (
+    ChaosFleetResult,
+    Migration,
+    migration_cost_s,
+    record_chaos,
+    simulate_fleet_chaos,
+)
 from repro.fleet.simulate import FleetResult, record_fleet, simulate_fleet
 from repro.sched.numpy_backend import make_policy
 
 __all__ = [
-    "CLUSTER_DURATION_S", "CLUSTER_EXEC_S",
-    "PLACEMENTS", "Assignment", "ClusterResult", "FleetResult",
+    "CLUSTER_DURATION_S", "CLUSTER_EXEC_S", "FLEET",
+    "PLACEMENTS", "Assignment", "ChaosFleetResult", "ClusterResult",
+    "FaultEvent", "FaultSchedule", "FleetResult", "Migration", "NodeState",
     "cluster_result", "consolidation_sweep", "fn_shares", "make_policy",
-    "min_nodes_meeting_slo", "place", "placement_comparison", "record_fleet",
-    "simulate_fleet", "switch_penalty",
+    "migration_cost_s", "min_nodes_meeting_slo", "place",
+    "placement_comparison", "record_chaos", "record_fleet", "simulate_fleet",
+    "simulate_fleet_chaos", "switch_penalty",
 ]

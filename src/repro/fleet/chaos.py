@@ -1,0 +1,240 @@
+"""Deterministic fault injection for the fleet (chaos schedule).
+
+A :class:`FaultSchedule` is an up-front-validated, time-ordered list of
+:class:`FaultEvent`\\ s injected into a fleet run by the rebalancing
+controller (:mod:`repro.fleet.rebalance`).  The grammar:
+
+  * ``node_crash(node)``        — the node stops heartbeating and serving;
+    its functions are stranded until the controller re-places them (or
+    forever, under a static placement).
+  * ``node_slow(node, factor)`` — the node degrades: every execution on it
+    takes ``factor``x longer (thermal throttling, noisy neighbour, failing
+    disk).  Detected by the :class:`~repro.distributed.fault.StragglerWatchdog`.
+  * ``burst_storm(factor)``     — fleet-wide demand multiplier (a traffic
+    storm): offered load scales by ``factor`` until the storm recovers.
+  * ``recover(node)``           — the node (or, with ``node=-1``, the
+    storm) returns to nominal.
+
+Schedules are deterministic and replayable byte-for-byte: events are
+normalised to a canonical sorted order, ``to_json``/``from_json`` round-trip
+exactly, and :meth:`FaultSchedule.random` derives a schedule purely from a
+seed.  Event times snap to controller epoch boundaries (the controller
+applies every event with ``t < epoch_end`` at the start of that epoch), so
+a schedule plus an epoch length fully determines the fleet timeline.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+#: recognised event kinds and whether they carry a factor argument
+KINDS = {
+    "node_crash": False,
+    "node_slow": True,
+    "burst_storm": True,
+    "recover": False,
+}
+
+#: ``node`` value meaning "the fleet as a whole" (burst_storm / its recover)
+FLEET = -1
+
+
+@dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One timed injection.  ``node`` is ``FLEET`` (-1) for fleet-wide
+    events; ``factor`` is the slowdown / rate multiplier (>= 1)."""
+
+    t: float
+    kind: str
+    node: int = FLEET
+    factor: float = 1.0
+
+    def to_dict(self) -> dict:
+        return {"t": self.t, "kind": self.kind, "node": self.node,
+                "factor": self.factor}
+
+
+class FaultSchedule:
+    """Validated, time-ordered fault schedule for ``n_nodes`` fleet nodes."""
+
+    def __init__(self, events: Iterable[FaultEvent], n_nodes: int):
+        self.n_nodes = int(n_nodes)
+        self.events: Tuple[FaultEvent, ...] = tuple(sorted(events))
+        self._validate()
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def empty(cls, n_nodes: int) -> "FaultSchedule":
+        return cls((), n_nodes)
+
+    @classmethod
+    def single_crash(cls, node: int, t: float, n_nodes: int) -> "FaultSchedule":
+        """The fig_failover scenario: one node dies and stays dead."""
+        return cls([FaultEvent(t, "node_crash", node)], n_nodes)
+
+    @classmethod
+    def random(cls, seed: int, n_nodes: int, duration_s: float,
+               n_events: int = 4) -> "FaultSchedule":
+        """Seed-deterministic schedule: crashes, slowdowns, storms and
+        matched recoveries, never crashing the whole fleet."""
+        rng = np.random.default_rng(seed)
+        events: List[FaultEvent] = []
+        dead: set = set()
+        slow: set = set()
+        storm = False
+        # draw times pre-sorted so the state tracked during generation is
+        # the state in *time* order (events are time-sorted on construction)
+        times = np.sort(rng.uniform(0.05, 0.95, int(n_events))) * duration_s
+        for t in times:
+            t = float(t)
+            roll = rng.uniform()
+            if roll < 0.35 and len(dead) + 1 < n_nodes:
+                alive = [n for n in range(n_nodes) if n not in dead]
+                node = int(rng.choice(alive))
+                dead.add(node)
+                slow.discard(node)
+                events.append(FaultEvent(t, "node_crash", node))
+            elif roll < 0.65:
+                cand = [n for n in range(n_nodes) if n not in dead]
+                node = int(rng.choice(cand))
+                slow.add(node)
+                events.append(FaultEvent(
+                    t, "node_slow", node, float(rng.uniform(1.5, 4.0))))
+            elif roll < 0.85 and not storm:
+                storm = True
+                events.append(FaultEvent(
+                    t, "burst_storm", FLEET, float(rng.uniform(1.2, 2.5))))
+            elif slow or storm:
+                if storm and (not slow or rng.uniform() < 0.5):
+                    storm = False
+                    events.append(FaultEvent(t, "recover", FLEET))
+                else:
+                    node = int(rng.choice(sorted(slow)))
+                    slow.discard(node)
+                    events.append(FaultEvent(t, "recover", node))
+        return cls(events, n_nodes)
+
+    # -- validation --------------------------------------------------------
+    def _validate(self) -> None:
+        dead: set = set()
+        slow: set = set()
+        storm = False
+        for ev in self.events:
+            if ev.kind not in KINDS:
+                raise ValueError(
+                    f"unknown fault kind {ev.kind!r}; have {sorted(KINDS)}")
+            if ev.t < 0.0:
+                raise ValueError(f"event time must be >= 0, got {ev.t}")
+            if KINDS[ev.kind] and ev.factor < 1.0:
+                raise ValueError(
+                    f"{ev.kind} factor must be >= 1, got {ev.factor}")
+            if ev.kind == "burst_storm":
+                if ev.node != FLEET:
+                    raise ValueError("burst_storm is fleet-wide (node=-1)")
+                storm = True
+                continue
+            if ev.kind == "recover" and ev.node == FLEET:
+                if not storm:
+                    raise ValueError(
+                        f"recover(fleet) at t={ev.t} with no active storm")
+                storm = False
+                continue
+            if not (0 <= ev.node < self.n_nodes):
+                raise ValueError(
+                    f"{ev.kind} node {ev.node} out of range "
+                    f"[0, {self.n_nodes})")
+            if ev.kind == "node_crash":
+                if ev.node in dead:
+                    raise ValueError(f"node {ev.node} crashed twice")
+                dead.add(ev.node)
+                slow.discard(ev.node)
+            elif ev.kind == "node_slow":
+                if ev.node in dead:
+                    raise ValueError(
+                        f"node_slow on already-crashed node {ev.node}")
+                slow.add(ev.node)
+            elif ev.kind == "recover":
+                if ev.node in dead:
+                    dead.discard(ev.node)
+                elif ev.node in slow:
+                    slow.discard(ev.node)
+                else:
+                    raise ValueError(
+                        f"recover(node={ev.node}) at t={ev.t}: node is "
+                        "neither crashed nor slow")
+        if len(dead) >= self.n_nodes:
+            raise ValueError("schedule crashes every node")
+
+    # -- queries -----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def events_in(self, t0: float, t1: float) -> List[FaultEvent]:
+        """Events with ``t0 <= t < t1`` (the controller applies these at
+        the start of the epoch covering ``[t0, t1)``)."""
+        return [e for e in self.events if t0 <= e.t < t1]
+
+    # -- replayable serialisation -----------------------------------------
+    def to_json(self) -> str:
+        """Canonical (sorted, fixed key order) encoding — byte-for-byte
+        stable for identical schedules."""
+        return json.dumps(
+            {"n_nodes": self.n_nodes,
+             "events": [e.to_dict() for e in self.events]},
+            sort_keys=True, separators=(",", ":"),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultSchedule":
+        obj = json.loads(text)
+        return cls(
+            [FaultEvent(e["t"], e["kind"], e.get("node", FLEET),
+                        e.get("factor", 1.0)) for e in obj["events"]],
+            obj["n_nodes"],
+        )
+
+
+@dataclass
+class NodeState:
+    """The controller's view of ground-truth fleet condition: which nodes
+    are up, each node's current slowdown factor, and the active demand
+    multiplier.  Mutated by :meth:`apply` as events fire."""
+
+    n_nodes: int
+    alive: Optional[np.ndarray] = None
+    slow: Optional[np.ndarray] = None
+    storm: float = 1.0
+
+    def __post_init__(self):
+        if self.alive is None:
+            self.alive = np.ones(self.n_nodes, bool)
+        if self.slow is None:
+            self.slow = np.ones(self.n_nodes)
+
+    def apply(self, ev: FaultEvent) -> None:
+        if ev.kind == "node_crash":
+            self.alive[ev.node] = False
+            self.slow[ev.node] = 1.0
+        elif ev.kind == "node_slow":
+            self.slow[ev.node] = ev.factor
+        elif ev.kind == "burst_storm":
+            self.storm = ev.factor
+        elif ev.kind == "recover":
+            if ev.node == FLEET:
+                self.storm = 1.0
+            else:
+                self.alive[ev.node] = True
+                self.slow[ev.node] = 1.0
+
+    def snapshot(self) -> Dict[str, object]:
+        return {
+            "alive": self.alive.astype(int).tolist(),
+            "slow": [round(float(x), 6) for x in self.slow],
+            "storm": round(float(self.storm), 6),
+        }

@@ -114,10 +114,17 @@ def _round_robin(shares: np.ndarray, n_nodes: int, **_kw) -> List[np.ndarray]:
 
 @_register("pack")
 def _pack(shares: np.ndarray, n_nodes: int, headroom: float = 1.25,
+          init_load: Optional[np.ndarray] = None,
           **_kw) -> List[np.ndarray]:
-    """First-fit decreasing by reserved share against a per-node cap."""
-    cap = headroom * shares.sum() / n_nodes
-    load = np.zeros(n_nodes)
+    """First-fit decreasing by reserved share against a per-node cap.
+
+    ``init_load`` warm-starts the per-node loads (mid-run rebalancing:
+    survivors already carry their placed share; only the new functions in
+    ``shares`` are assigned).
+    """
+    load = (np.zeros(n_nodes) if init_load is None
+            else np.asarray(init_load, float).copy())
+    cap = headroom * (shares.sum() + load.sum()) / n_nodes
     out: List[list] = [[] for _ in range(n_nodes)]
     for f in np.argsort(-shares, kind="stable"):
         fits = np.where(load + shares[f] <= cap)[0]
@@ -130,9 +137,13 @@ def _pack(shares: np.ndarray, n_nodes: int, headroom: float = 1.25,
 
 
 @_register("spread")
-def _spread(shares: np.ndarray, n_nodes: int, **_kw) -> List[np.ndarray]:
-    """Least-loaded (LPT greedy) by reserved share."""
-    load = np.zeros(n_nodes)
+def _spread(shares: np.ndarray, n_nodes: int,
+            init_load: Optional[np.ndarray] = None,
+            **_kw) -> List[np.ndarray]:
+    """Least-loaded (LPT greedy) by reserved share.  ``init_load``
+    warm-starts per-node loads for mid-run rebalancing."""
+    load = (np.zeros(n_nodes) if init_load is None
+            else np.asarray(init_load, float).copy())
     out: List[list] = [[] for _ in range(n_nodes)]
     for f in np.argsort(-shares, kind="stable"):
         n = int(np.argmin(load))
@@ -194,11 +205,19 @@ def switch_penalty(
 @_register("switch-aware")
 def _switch_aware(shares: np.ndarray, n_nodes: int,
                   policy: Optional[Policy] = None, n_cores: int = 12,
-                  depth: float = 5.0, **_kw) -> List[np.ndarray]:
-    """Greedy least-(load + switch-overhead) placement."""
+                  depth: float = 5.0,
+                  init_load: Optional[np.ndarray] = None,
+                  init_groups: Optional[np.ndarray] = None,
+                  **_kw) -> List[np.ndarray]:
+    """Greedy least-(load + switch-overhead) placement.  ``init_load`` /
+    ``init_groups`` warm-start the survivors' reserved load and colocated
+    cgroup counts for mid-run rebalancing, so the switch-cost objective
+    prices the *post-migration* density of each candidate node."""
     policy = policy or make_policy("cfs")
-    load = np.zeros(n_nodes)
-    groups = np.zeros(n_nodes, np.int64)
+    load = (np.zeros(n_nodes) if init_load is None
+            else np.asarray(init_load, float).copy())
+    groups = (np.zeros(n_nodes, np.int64) if init_groups is None
+              else np.asarray(init_groups, np.int64).copy())
     out: List[list] = [[] for _ in range(n_nodes)]
     for f in np.argsort(-shares, kind="stable"):
         s = float(shares[f])

@@ -135,11 +135,15 @@ def _empty_node(policy_name: str, duration_s: float, n_cores: int,
 
 def _node_sim_numpy(policy_name: str, n_fns: int, duration_s: float,
                     n_cores: int, seed: int, exec_s: float,
-                    threads_per_fn: int) -> SimResult:
+                    threads_per_fn: int,
+                    rates: Optional[np.ndarray] = None,
+                    fn_ids: Optional[np.ndarray] = None,
+                    extra: Optional[np.ndarray] = None) -> SimResult:
     wl = make_workload(
         "azure2021", n_fns, duration_s=duration_s, n_cores=n_cores,
         seed=seed, exec_s=exec_s,
-        threads_per_fn=threads_per_fn,
+        threads_per_fn=threads_per_fn, rates=rates, fn_ids=fn_ids,
+        extra=extra,
     )
     return simulate(
         wl, make_policy(policy_name),
@@ -169,20 +173,37 @@ def _pad_trace(trace, T: int, R: int):
 
 
 def _fleet_sim_jax(policy_name: str, counts: np.ndarray, duration_s: float,
-                   n_cores: int, seeds: List[int], exec_s: float,
-                   threads_per_fn: int) -> List[SimResult]:
-    """All nodes of one configuration in a single vmapped ``lax.scan``."""
+                   n_cores: int, seeds: List[int], exec_s,
+                   threads_per_fn: int,
+                   rates: Optional[List[Optional[np.ndarray]]] = None,
+                   fn_ids: Optional[List[Optional[np.ndarray]]] = None,
+                   extra: Optional[List[Optional[np.ndarray]]] = None,
+                   ) -> List[SimResult]:
+    """All nodes of one configuration in a single vmapped ``lax.scan``.
+
+    ``exec_s`` is a scalar or one per-node execution time (chaos slowdowns);
+    ``rates`` optionally carries explicit per-node request-rate vectors,
+    ``fn_ids`` the matching global function ids (common random numbers)
+    and ``extra`` per-node exact-count replay arrivals.
+    """
     import jax
     import jax.numpy as jnp
 
     from repro.core import simkernel_jax as sj
     from repro.sched.jax_backend import CODE_OF
 
+    execs = ([float(exec_s)] * len(counts) if np.isscalar(exec_s)
+             else [float(e) for e in exec_s])
+    node_rates = rates if rates is not None else [None] * len(counts)
+    node_fids = fn_ids if fn_ids is not None else [None] * len(counts)
+    node_extra = extra if extra is not None else [None] * len(counts)
     traces = []
-    for k, seed in zip(counts, seeds):
+    for k, seed, ex, r, fids, xt in zip(counts, seeds, execs, node_rates,
+                                        node_fids, node_extra):
         wl = make_workload(
             "azure2021", int(k), duration_s=duration_s, n_cores=n_cores,
-            seed=seed, exec_s=exec_s, threads_per_fn=threads_per_fn,
+            seed=seed, exec_s=ex, threads_per_fn=threads_per_fn, rates=r,
+            fn_ids=fids, extra=xt,
         )
         traces.append(sj.build_slot_trace(wl, int(k), threads_per_fn))
     max_fns = int(max(counts))
@@ -236,32 +257,78 @@ def simulate_fleet(
     distinct_seeds: bool = False,
     threads_per_fn: int = 0,
     record_dir: Optional[str] = None,
+    node_exec_mult: Optional[np.ndarray] = None,
+    dead: Optional[np.ndarray] = None,
+    node_rates: Optional[List[Optional[np.ndarray]]] = None,
+    node_extra: Optional[List[Optional[np.ndarray]]] = None,
 ) -> FleetResult:
-    """Simulate every node of a placed fleet; see the module docstring."""
+    """Simulate every node of a placed fleet; see the module docstring.
+
+    Chaos hooks (used by :mod:`repro.fleet.rebalance`): ``node_exec_mult``
+    scales each node's per-request execution time (a degraded/slow node
+    serves the same demand more slowly), ``dead`` marks crashed nodes —
+    they are not simulated and appear as explicit zero-work nodes (their
+    stranded arrivals are accounted by the chaos controller, not here) —
+    and ``node_rates`` gives each node explicit per-function request
+    rates, so a node's offered load follows the functions *assigned* to
+    it (after a migration the regenerate-by-count band model would lose
+    the moved functions' demand mass).  Rate-based nodes draw each
+    function's arrival stream from ``(seed, global fn id)`` — common
+    random numbers, so a function keeps its realization across
+    placements — and bypass the equal-count cache (their workloads are
+    no longer statistically identical).  ``node_extra`` (requires
+    ``node_rates``) adds exact-count replay arrivals per function — the
+    chaos layer's retry-backlog and epoch-carryover channel.
+    """
     counts = assignment.counts
     assert int(counts.sum()) == int(assignment.shares.shape[0]), (
         "placement dropped functions"  # Assignment already guards this
     )
     seeds = [seed + i if distinct_seeds else seed
              for i in range(assignment.n_nodes)]
-    live = [(i, int(k)) for i, k in enumerate(counts) if k > 0]
+    mult = (np.ones(assignment.n_nodes) if node_exec_mult is None
+            else np.asarray(node_exec_mult, float))
+    is_dead = (np.zeros(assignment.n_nodes, bool) if dead is None
+               else np.asarray(dead, bool))
+    rate_of = (node_rates if node_rates is not None
+               else [None] * assignment.n_nodes)
+    extra_of = (node_extra if node_extra is not None
+                else [None] * assignment.n_nodes)
+    live = [(i, int(k)) for i, k in enumerate(counts)
+            if k > 0 and not is_dead[i]]
+    fids_of = [
+        np.asarray(assignment.node_fns[i], np.int64)
+        if rate_of[i] is not None else None
+        for i in range(assignment.n_nodes)
+    ]
     if backend == "jax":
         tpf = threads_per_fn or 8
         sims = _fleet_sim_jax(
             policy_name, np.asarray([k for _, k in live]), duration_s,
-            n_cores, [seeds[i] for i, _ in live], exec_s, tpf,
+            n_cores, [seeds[i] for i, _ in live],
+            [exec_s * float(mult[i]) for i, _ in live], tpf,
+            rates=[rate_of[i] for i, _ in live],
+            fn_ids=[fids_of[i] for i, _ in live],
+            extra=[extra_of[i] for i, _ in live],
         )
         by_node = {i: r for (i, _), r in zip(live, sims)}
     elif backend == "numpy":
         tpf = threads_per_fn or 192
-        cache: Dict[Tuple[int, int], SimResult] = {}
+        cache: Dict[Tuple, SimResult] = {}
         by_node = {}
         for i, k in live:
-            key = (k, int(seeds[i]))
+            r = rate_of[i]
+            key = (k, int(seeds[i]), float(mult[i]),
+                   None if r is None else hash(np.asarray(r).tobytes()),
+                   None if fids_of[i] is None
+                   else hash(fids_of[i].tobytes()),
+                   None if extra_of[i] is None
+                   else hash(np.asarray(extra_of[i], np.int64).tobytes()))
             if key not in cache:
                 cache[key] = _node_sim_numpy(
                     policy_name, k, duration_s, n_cores, int(seeds[i]),
-                    exec_s, tpf,
+                    exec_s * float(mult[i]), tpf, rates=r,
+                    fn_ids=fids_of[i], extra=extra_of[i],
                 )
             by_node[i] = cache[key]
     else:

@@ -87,6 +87,22 @@ def main(argv=None):
     ap.add_argument("--shard", default="",
                     help="shard label recorded in the run meta, for "
                          "post-hoc `report --merge` of parallel shards")
+    ap.add_argument("--admission-timeout", type=float, default=0.0,
+                    metavar="S",
+                    help="graceful degradation: expire requests still "
+                         "queued S sim-seconds after arrival (0 = off)")
+    ap.add_argument("--backoff-base", type=float, default=0.02,
+                    metavar="S",
+                    help="first out-of-pages backoff; doubles per "
+                         "rejection (capped at 0.5s)")
+    ap.add_argument("--shed-watermark", type=int, default=0,
+                    help="overload shedding: total queue depth past which "
+                         "the highest-credit tenants' work is shed (0 = "
+                         "off)")
+    ap.add_argument("--shed-mode", default="drop",
+                    choices=("drop", "truncate"),
+                    help="shed by dropping newest requests or by halving "
+                         "their max_new once")
     args = ap.parse_args(argv)
 
     if args.obs_dir or args.trace:
@@ -99,7 +115,11 @@ def main(argv=None):
         EngineConfig(policy=args.policy, n_slots=args.slots,
                      max_resident=args.max_resident,
                      preempt_hysteresis=args.hysteresis,
-                     pallas_threshold=args.pallas_threshold),
+                     pallas_threshold=args.pallas_threshold,
+                     admission_timeout_s=args.admission_timeout,
+                     backoff_base_s=args.backoff_base,
+                     shed_watermark=args.shed_watermark,
+                     shed_mode=args.shed_mode),
         tenants,
     )
     if args.real_model:
@@ -118,6 +138,12 @@ def main(argv=None):
         "slots": args.slots, "seed": args.seed,
         "arrivals": len(arrivals),
     }
+    if args.admission_timeout or args.shed_watermark:
+        meta["degradation"] = {
+            "admission_timeout_s": args.admission_timeout,
+            "shed_watermark": args.shed_watermark,
+            "shed_mode": args.shed_mode,
+        }
     if args.shard:
         meta["shard"] = args.shard
 
@@ -147,6 +173,8 @@ def main(argv=None):
         f"p95={np.percentile(lat, 95) if len(lat) else -1:.2f}s "
         f"switch_overhead={st.overhead_frac*100:.1f}% "
         f"membership_changes={st.membership_changes}"
+        + (f" shed={st.shed} expired={st.expired} backoffs={st.backoffs}"
+           if (st.shed or st.expired or st.backoffs) else "")
         + (f" checkpoints={n_ckpt}" if n_ckpt else "")
     )
     if args.obs_dir:

@@ -25,11 +25,14 @@ def record_run(
     sched: Optional[SchedStats] = None,
     include_registry: bool = True,
     tracer: Optional[tracing_mod.Tracer] = None,
+    chaos: Optional[dict] = None,
 ) -> str:
     """Write a run record; returns the path of ``run.json``.
 
     ``tracer`` defaults to the installed process tracer (if any); pass a
-    tracer explicitly to export one you drove by hand.
+    tracer explicitly to export one you drove by hand.  ``chaos`` attaches
+    a failover report (``repro.fleet.rebalance.ChaosFleetResult.report()``)
+    that ``repro.obs.report`` renders as the ``failover:`` section.
     """
     os.makedirs(out_dir, exist_ok=True)
     obj = {
@@ -40,6 +43,8 @@ def record_run(
             metrics_mod.registry().snapshot() if include_registry else {}
         ),
     }
+    if chaos is not None:
+        obj["chaos"] = dict(chaos)
     if tracer is None:
         tracer = tracing_mod.tracer()
     if tracer is not None and len(tracer):

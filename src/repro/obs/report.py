@@ -67,16 +67,67 @@ def _key_rows(sched: SchedStats) -> List[tuple]:
     ]
 
 
+def _failover_section(ch: dict) -> List[str]:
+    """Render a chaos/failover report (attached by
+    ``repro.fleet.record_chaos``): what was injected, what moved, how fast
+    the fleet recovered, and SLO attainment inside degraded windows."""
+    evs = ch.get("events", [])
+    erows = [
+        [_fmt(e.get("t"), "s"), str(e.get("kind")),
+         "fleet" if e.get("node", -1) < 0 else str(e.get("node")),
+         _fmt(e.get("factor"))]
+        for e in evs
+    ]
+    rec = ch.get("recovery_s", {}) or {}
+    rec_txt = ", ".join(
+        f"node{n}={'never' if v is None else _fmt(v, 's')}"
+        for n, v in sorted(rec.items())
+    ) or "-"
+    rows = [
+        ["epochs", f"{ch.get('epochs')} x {_fmt(ch.get('epoch_s'), 's')}"],
+        ["rebalanced", str(ch.get("rebalanced"))],
+        ["migrations", str(ch.get("migrations", 0))],
+        ["migration_s", _fmt(ch.get("migration_s"), "s")],
+        ["stranded/replayed",
+         f"{ch.get('stranded_arrivals', 0)}/{ch.get('replayed_arrivals', 0)}"],
+        ["lost_arrivals", str(ch.get("lost_arrivals", 0))],
+        ["completed/arrived",
+         f"{ch.get('completed')}/{ch.get('arrived')} "
+         f"({_fmt(ch.get('done_ratio'), '%')})"],
+        ["recovery", rec_txt],
+        ["degraded_slo_attainment",
+         _fmt(ch.get("degraded_slo_attainment"), "%")],
+    ]
+    drained = ch.get("stragglers_drained") or []
+    if drained:
+        rows.append(["stragglers_drained",
+                     ", ".join(str(s) for s in drained)])
+    out = ["", "failover:", _table(["metric", "value"], rows)]
+    if erows:
+        out += ["", "injected events:",
+                _table(["t", "kind", "node", "factor"], erows)]
+    counts = ch.get("per_epoch_counts") or []
+    if counts:
+        out += ["", "per-epoch node fn counts:"]
+        out += [f"  epoch {i}: {c}" for i, c in enumerate(counts)]
+    return out
+
+
 def summarize(run: dict, top: int = 0) -> str:
     meta = run.get("meta", {})
     sched: Optional[SchedStats] = run.get("sched")
+    chaos = run.get("chaos")
     head = " ".join(f"{k}={v}" for k, v in sorted(meta.items()))
     out = [f"run: {head}" if head else "run: (no meta)"]
     if sched is None:
         out.append("(no schedstats recorded)")
+        if chaos:
+            out.extend(_failover_section(chaos))
         return "\n".join(out)
     rows = [[name, _fmt(val, unit)] for name, val, unit in _key_rows(sched)]
     out.append(_table(["metric", "value"], rows))
+    if chaos:
+        out.extend(_failover_section(chaos))
     if top > 0 and sched.entities:
         ents = sorted(sched.entities.items(),
                       key=lambda kv: kv[1].useful_s, reverse=True)[:top]
@@ -129,6 +180,12 @@ def merge(runs: List[dict]) -> str:
                [[name, _fmt(val, unit)]
                 for name, val, unit in _key_rows(merged)]),
     ]
+    # a chaos fleet's top-level record carries the failover report — keep
+    # it visible in the merged fleet view too
+    for r in runs:
+        if r.get("chaos"):
+            out.extend(_failover_section(r["chaos"]))
+            break
     return "\n".join(out)
 
 

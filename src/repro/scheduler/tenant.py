@@ -25,6 +25,13 @@ class Request:
     prefilled: bool = False
     start_time: float = -1.0
     finish_time: float = -1.0
+    # graceful-degradation state (repro.serving.engine): out-of-pages
+    # rejections so far, the engine time before which the request is parked
+    # (exponential backoff), and whether overload shedding already halved
+    # its ``max_new`` (truncation is applied at most once per request)
+    rejections: int = 0
+    backoff_until: float = 0.0
+    truncated: bool = False
 
     @property
     def done(self) -> bool:

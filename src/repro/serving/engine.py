@@ -54,6 +54,23 @@ class EngineConfig:
     dispatch_s_per_member_change: float = 0.4e-3  # batch re-formation
     max_resident: int = 24  # tenants whose weights fit in HBM (LRU)
     credit_window: int = 256
+    # -- graceful degradation (each knob 0 = off) ------------------------
+    # admission deadline: a request still queued (never admitted) this many
+    # sim-seconds after arrival is expired instead of served late
+    admission_timeout_s: float = 0.0
+    # out-of-pages rejections park the request with exponential backoff
+    # (base * 2**(rejections-1), capped) instead of silently re-queueing it
+    # at the head where it re-fails every step
+    backoff_base_s: float = 0.02
+    backoff_max_s: float = 0.5
+    # overload shedding: when total queued work (tenant queues + parked)
+    # exceeds the watermark, shed from the *highest-credit* tenants — the
+    # most-served, i.e. lowest-priority work under LAGS admission (the
+    # issue's "lowest-credit work" in admission-order terms: the work
+    # admitted last).  ``drop`` discards newest requests; ``truncate``
+    # halves ``max_new`` once per request instead of dropping.
+    shed_watermark: int = 0
+    shed_mode: str = "drop"  # "drop" | "truncate"
 
 
 class EngineStats:
@@ -70,6 +87,11 @@ class EngineStats:
         self.time_s = 0.0
         self.steps = 0
         self.completed: List[Request] = []
+        # graceful-degradation counters (also published as obs metrics
+        # ``engine.shed`` / ``engine.expired`` / ``engine.backoff``)
+        self.shed = 0
+        self.expired = 0
+        self.backoffs = 0
 
     @property
     def useful_s(self) -> float:
@@ -97,6 +119,7 @@ class Engine:
         self.stats = EngineStats()
         self._prev_members: set = set()
         self._resident: List[int] = []  # LRU order, most recent last
+        self._parked: List[Request] = []  # backing off after page rejection
         self._model = None
 
     # -- optional real-model backend ------------------------------------
@@ -112,13 +135,12 @@ class Engine:
         self._cache_len = 0
 
         def _step(params, tokens, cache, cache_len):
+            # model_lib.decode_step(params, cfg, batch, cache, cache_len)
             return model_lib.decode_step(
-                model_cfg, params, tokens, cache, cache_len
+                params, model_cfg, {"tokens": tokens}, cache, cache_len
             )
 
-        self._decode = jax.jit(
-            lambda p, t, c, l: model_lib.decode_step(p, model_cfg, {"tokens": t}, c, l)
-        )
+        self._decode = jax.jit(_step)
 
     def submit(self, req: Request):
         self.tenants[req.tenant].queue.append(req)
@@ -141,6 +163,16 @@ class Engine:
                 still.append(r)
         self.running = still
 
+        # graceful degradation: return parked requests whose backoff
+        # expired, expire requests past their admission deadline, shed
+        # overload beyond the queue-depth watermark
+        if self._parked:
+            self._unpark()
+        if cfg.admission_timeout_s > 0:
+            self._expire_queued()
+        if cfg.shed_watermark > 0:
+            self._shed_overload()
+
         # LAGS global path: lighter waiting tenant may evict a heavy one
         running_tids = {r.tenant for r in self.running}
         preempt, victim = should_preempt(
@@ -162,11 +194,24 @@ class Engine:
             cfg.policy, self.tenants, free, running_tids
         )
         prefill_toks = 0
-        for r in admitted:
+        for idx, r in enumerate(admitted):
             if r.rid not in self.alloc.owner:  # resumed requests keep pages
                 pages = self.alloc.allocate(r.rid, r.prompt_len + r.max_new)
-                if pages is None:  # out of pages: requeue and stop admitting
-                    self.tenants[r.tenant].queue.appendleft(r)
+                if pages is None:
+                    # out of pages: park the rejected request with
+                    # exponential backoff (the old silent ``appendleft``
+                    # made it re-fail at the queue head every step), put
+                    # the not-yet-tried admissions back, stop admitting
+                    r.rejections += 1
+                    r.backoff_until = st.time_s + min(
+                        cfg.backoff_base_s * 2.0 ** (r.rejections - 1),
+                        cfg.backoff_max_s,
+                    )
+                    self._parked.append(r)
+                    st.backoffs += 1
+                    obs_metrics.counter("engine.backoff").inc()
+                    for later in reversed(admitted[idx + 1:]):
+                        self.tenants[later.tenant].queue.appendleft(later)
                     break
             if r.start_time < 0:
                 r.start_time = st.time_s
@@ -267,6 +312,100 @@ class Engine:
         else:
             for tid, t in self.tenants.items():
                 t.tick(served.get(tid, 0.0), step_s, cfg.credit_window)
+
+    # -- graceful degradation ---------------------------------------------
+    def _unpark(self):
+        """Return parked requests whose backoff expired to the head of
+        their tenant queue (they were at the head when rejected); parked
+        requests past the admission deadline expire in place."""
+        cfg, st = self.cfg, self.stats
+        now = st.time_s
+        still: List[Request] = []
+        for r in self._parked:
+            if r.backoff_until > now:
+                still.append(r)
+            elif (cfg.admission_timeout_s > 0
+                  and now - r.arrival > cfg.admission_timeout_s):
+                st.expired += 1
+                obs_metrics.counter("engine.expired").inc()
+            else:
+                self.tenants[r.tenant].queue.appendleft(r)
+        self._parked = still
+
+    def _expire_queued(self):
+        """Drop queued requests whose admission deadline passed.  Requests
+        that already ran (preempted, ``start_time >= 0``) are kept — the
+        deadline bounds time-to-first-service, not total residence."""
+        cfg, st = self.cfg, self.stats
+        now = st.time_s
+        dropped = 0
+        for t in self.tenants.values():
+            if not t.queue:
+                continue
+            keep = [r for r in t.queue
+                    if r.start_time >= 0
+                    or now - r.arrival <= cfg.admission_timeout_s]
+            if len(keep) != len(t.queue):
+                dropped += len(t.queue) - len(keep)
+                t.queue.clear()
+                t.queue.extend(keep)
+        if dropped:
+            st.expired += dropped
+            obs_metrics.counter("engine.expired").inc(dropped)
+            if obs_tracing.active():
+                obs_tracing.tracer().emit(
+                    "engine.expire", "engine", now * 1e6, 0.0,
+                    {"dropped": dropped}, ph="i",
+                )
+
+    def _shed_overload(self):
+        """Past the queue-depth watermark, shed from the highest-credit
+        (most-served — the lowest-priority work under LAGS admission
+        order) tenants: ``drop`` discards their newest queued requests
+        until the depth is back at the watermark; ``truncate`` halves
+        ``max_new`` (once per request) on the same number of requests."""
+        cfg, st = self.cfg, self.stats
+        depth = sum(len(t.queue) for t in self.tenants.values()) \
+            + len(self._parked)
+        excess = depth - cfg.shed_watermark
+        if excess <= 0:
+            return
+        shed = 0
+        order = sorted(self.tenants.values(),
+                       key=lambda t: (-t.credit, -t.tid))
+        if cfg.shed_mode == "drop":
+            for t in order:
+                while shed < excess and t.queue:
+                    # newest first: requests already waiting keep their turn
+                    if t.queue[-1].start_time >= 0:
+                        break  # preempted mid-flight work is never shed
+                    t.queue.pop()
+                    shed += 1
+                if shed >= excess:
+                    break
+        elif cfg.shed_mode == "truncate":
+            for t in order:
+                for r in t.queue:
+                    if shed >= excess:
+                        break
+                    if not r.truncated and r.generated == 0 and r.max_new > 1:
+                        r.max_new = max(1, r.max_new // 2)
+                        r.truncated = True
+                        shed += 1
+                if shed >= excess:
+                    break
+        else:
+            raise ValueError(
+                f"unknown shed_mode {cfg.shed_mode!r} (drop|truncate)")
+        if shed:
+            st.shed += shed
+            obs_metrics.counter("engine.shed").inc(shed)
+            if obs_tracing.active():
+                obs_tracing.tracer().emit(
+                    "engine.shed", "engine", st.time_s * 1e6, 0.0,
+                    {"mode": cfg.shed_mode, "shed": shed, "depth": depth},
+                    ph="i",
+                )
 
     def _pallas_tick(self, served: Dict[int, float], step_s: float):
         """Per-step Load-Credit tick via the fused Pallas kernel.

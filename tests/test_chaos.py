@@ -1,0 +1,272 @@
+"""Chaos layer: fault schedules, the epoch-driven rebalancing controller,
+and the detection-stack fixes it depends on.
+
+Scenarios stay tiny (2-5 nodes, <= 48 functions, seconds-long epochs) so
+the whole file runs in tier-1 time; the full-scale failover story lives in
+``benchmarks/fig_failover.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.fault import HealthTracker, StragglerWatchdog
+from repro.fleet import (
+    FLEET,
+    FaultEvent,
+    FaultSchedule,
+    make_policy,
+    migration_cost_s,
+    place,
+    simulate_fleet,
+    simulate_fleet_chaos,
+)
+from repro.obs.recorder import load_run
+from repro.obs.report import summarize
+
+
+# --- schedule grammar & validation ------------------------------------------
+
+
+def test_schedule_validation_rejects_bad_events():
+    bad = [
+        ([FaultEvent(1.0, "meteor", 0)], "unknown fault kind"),
+        ([FaultEvent(-1.0, "node_crash", 0)], "time must be >= 0"),
+        ([FaultEvent(1.0, "node_slow", 0, 0.5)], "factor must be >= 1"),
+        ([FaultEvent(1.0, "burst_storm", 2, 2.0)], "fleet-wide"),
+        ([FaultEvent(1.0, "recover", FLEET)], "no active storm"),
+        ([FaultEvent(1.0, "node_crash", 7)], "out of range"),
+        ([FaultEvent(1.0, "node_crash", 0),
+          FaultEvent(2.0, "node_crash", 0)], "crashed twice"),
+        ([FaultEvent(1.0, "node_crash", 0),
+          FaultEvent(2.0, "node_slow", 0, 2.0)], "already-crashed"),
+        ([FaultEvent(1.0, "recover", 0)], "neither crashed nor slow"),
+        ([FaultEvent(1.0, "node_crash", 0),
+          FaultEvent(1.5, "node_crash", 1)], "crashes every node"),
+    ]
+    for events, match in bad:
+        with pytest.raises(ValueError, match=match):
+            FaultSchedule(events, n_nodes=2)
+
+
+def test_schedule_good_sequences_validate():
+    # crash -> recover -> crash again is legal; slow then recover is legal
+    FaultSchedule(
+        [
+            FaultEvent(1.0, "node_crash", 0),
+            FaultEvent(2.0, "recover", 0),
+            FaultEvent(3.0, "node_crash", 0),
+            FaultEvent(1.0, "node_slow", 1, 3.0),
+            FaultEvent(4.0, "recover", 1),
+            FaultEvent(0.5, "burst_storm", FLEET, 2.0),
+            FaultEvent(5.0, "recover", FLEET),
+        ],
+        n_nodes=3,
+    )
+
+
+def test_schedule_events_in_and_ordering():
+    s = FaultSchedule(
+        [FaultEvent(3.0, "node_crash", 1), FaultEvent(0.5, "node_slow", 0, 2.0)],
+        n_nodes=2,
+    )
+    # events are normalised to time order regardless of construction order
+    assert [e.t for e in s.events] == [0.5, 3.0]
+    assert [e.kind for e in s.events_in(0.0, 1.0)] == ["node_slow"]
+    assert [e.kind for e in s.events_in(3.0, 4.0)] == ["node_crash"]
+    assert s.events_in(1.0, 3.0) == []  # t0 <= t < t1
+
+
+def test_schedule_json_roundtrip_byte_stable():
+    a = FaultSchedule.random(seed=11, n_nodes=4, duration_s=30.0, n_events=6)
+    b = FaultSchedule.from_json(a.to_json())
+    assert a.to_json() == b.to_json()
+    assert a.events == b.events
+    # seed-determinism: same seed, same schedule, byte-for-byte
+    c = FaultSchedule.random(seed=11, n_nodes=4, duration_s=30.0, n_events=6)
+    assert c.to_json() == a.to_json()
+    assert FaultSchedule.random(
+        seed=12, n_nodes=4, duration_s=30.0, n_events=6,
+    ).to_json() != a.to_json()
+
+
+# --- detection stack (satellite fixes) --------------------------------------
+
+
+def test_health_tracker_grace_period_boundaries():
+    h = HealthTracker(2, timeout_s=10.0)
+    h.register(0, now=0.0)
+    h.register(1, now=0.0)
+    # a never-heartbeated host is NOT failed from t=0 (the old bug)
+    assert h.failed_hosts(now=0.0) == []
+    assert h.failed_hosts(now=10.0) == []  # boundary: grace is exclusive
+    assert h.failed_hosts(now=10.1) == [0, 1]  # grace expired
+    h.heartbeat(0, now=10.1)
+    assert h.failed_hosts(now=20.0) == [1]  # 0 within timeout of heartbeat
+    assert h.failed_hosts(now=20.2) == [0, 1]  # 0 timed out again
+    # un-registered hosts still date from t=0
+    h2 = HealthTracker(1, timeout_s=10.0)
+    assert h2.failed_hosts(now=5.0) == []
+    assert h2.failed_hosts(now=11.0) == [0]
+    # custom grace shorter than timeout
+    h3 = HealthTracker(1, timeout_s=100.0, grace_s=5.0)
+    h3.register(0, now=0.0)
+    assert h3.failed_hosts(now=4.0) == []
+    assert h3.failed_hosts(now=6.0) == [0]
+
+
+def test_straggler_watchdog_3x_stays_flagged():
+    """Regression: flagged samples no longer poison the EWMA baseline, so
+    a persistent 3x straggler stays flagged instead of normalising."""
+    w = StragglerWatchdog(n_hosts=4, warmup=4)
+    flags = []
+    for i in range(60):
+        for h in (0, 1, 2):
+            w.observe(h, 0.10)
+        flags.append(w.observe(3, 0.30 if i >= 10 else 0.10))
+    # debounce: the first slow sample is only a suspect (persist=2), every
+    # one after that must keep the straggler flagged
+    assert not any(flags[:11])
+    assert all(flags[11:]), "3x straggler must stay flagged every step"
+    # its excluded samples must not have dragged the fleet mean up
+    assert w.mean[3] < 0.15
+
+
+def test_straggler_watchdog_tolerates_heterogeneous_fleet():
+    """min_ratio guard: honest per-host mean differences (tens of percent)
+    with tiny per-host variance must NOT flag anyone."""
+    w = StragglerWatchdog(n_hosts=4, warmup=4)
+    base = [0.08, 0.10, 0.12, 0.14]
+    for _ in range(40):
+        for h, b in enumerate(base):
+            assert not w.observe(h, b)
+
+
+# --- controller: differential, crash, straggler drain, storm ----------------
+
+
+def _tiny(n_fns, n_nodes, strategy="spread", exec_s=0.1):
+    return place(strategy, n_fns, n_nodes, exec_s=exec_s)
+
+
+def test_empty_schedule_bit_identical_to_simulate_fleet():
+    asg = _tiny(48, 2, "round-robin")
+    base = simulate_fleet("lags", asg, duration_s=6.0, exec_s=0.1)
+    ch = simulate_fleet_chaos(
+        "lags", asg, FaultSchedule.empty(2), duration_s=6.0, exec_s=0.1)
+    assert np.array_equal(base.latencies, ch.latencies)
+    assert base.n_arrived == ch.n_arrived
+    assert base.n_completed == ch.n_completed
+    assert ch.migrations == [] and ch.lost_arrivals == 0
+
+
+def test_crash_rebalance_vs_static():
+    n_nodes, total = 3, 24
+    asg = _tiny(total, n_nodes)
+    n_victim_fns = len(asg.node_fns[1])
+    crash = FaultSchedule.single_crash(1, 3.0, n_nodes)
+    kw = dict(duration_s=9.0, epoch_s=1.5, exec_s=0.1, seed=10)
+    reb = simulate_fleet_chaos("lags", asg, crash, rebalance=True, **kw)
+    stat = simulate_fleet_chaos("lags", asg, crash, rebalance=False, **kw)
+
+    # the dead node is drained exactly once, onto survivors only
+    assert len(reb.migrations) == n_victim_fns
+    assert all(m.src == 1 and m.dst != 1 for m in reb.migrations)
+    assert reb.migration_s >= 0.0  # lags run-to-completion can price ~0
+    last = reb.per_epoch_counts()[-1]
+    assert last[1] == 0 and sum(last) == total
+    assert reb.recovery_s()[1] is not None
+
+    # static strands them for the rest of the run
+    assert stat.migrations == []
+    assert stat.per_epoch_counts()[-1][1] == n_victim_fns
+    assert stat.recovery_s()[1] is None
+    # failover drains the retry backlog; a static placement never does
+    assert reb.stranded_arrivals > 0
+    assert reb.replayed_arrivals == reb.stranded_arrivals
+    assert reb.lost_arrivals == 0
+    assert stat.replayed_arrivals == 0
+    assert stat.lost_arrivals == stat.stranded_arrivals > 0
+    assert reb.n_completed > stat.n_completed
+    # outage demand shows up as arrived-but-lost, not silently dropped
+    assert stat.n_arrived >= stat.n_completed + stat.lost_arrivals
+
+
+def test_slow_node_flagged_and_drained():
+    n_nodes, total = 8, 64
+    asg = _tiny(total, n_nodes)
+    sch = FaultSchedule([FaultEvent(0.0, "node_slow", 2, 3.0)], n_nodes)
+    res = simulate_fleet_chaos(
+        "lags", asg, sch, duration_s=8.0, epoch_s=1.0, exec_s=0.1, seed=7)
+    assert any(2 in e.stragglers for e in res.epochs)
+    assert 2 in res.report()["stragglers_drained"]
+    assert res.per_epoch_counts()[-1][2] == 0  # quarantined and drained
+    assert all(m.src == 2 for m in res.migrations)
+    assert sum(res.per_epoch_counts()[-1]) == total
+
+
+def test_burst_storm_scales_demand_then_recovers():
+    n_nodes, total = 2, 16
+    asg = _tiny(total, n_nodes)
+    sch = FaultSchedule(
+        [FaultEvent(0.0, "burst_storm", FLEET, 3.0),
+         FaultEvent(2.0, "recover", FLEET)],
+        n_nodes,
+    )
+    # memoryless epochs isolate the storm's *nominal* demand scaling from
+    # the carryover of whatever the storm left unfinished
+    kw = dict(duration_s=4.0, epoch_s=1.0, exec_s=0.1, seed=6,
+              carry_unfinished=False)
+    res = simulate_fleet_chaos("lags", asg, sch, **kw)
+    calm = simulate_fleet_chaos("lags", asg, FaultSchedule.empty(n_nodes), **kw)
+    storm_arr = sum(e.fleet.n_arrived for e in res.epochs[:2])
+    calm_arr = sum(e.fleet.n_arrived for e in calm.epochs[:2])
+    assert storm_arr > 1.5 * calm_arr
+    # post-recovery epochs replay the calm run exactly (same seeds/rates)
+    assert res.epochs[3].fleet.n_arrived == calm.epochs[3].fleet.n_arrived
+
+
+def test_migration_cost_policy_asymmetry():
+    c_cfs = migration_cost_s(make_policy("cfs"), 88)
+    c_lags = migration_cost_s(make_policy("lags"), 88)
+    assert c_cfs > 10 * c_lags >= 0.0
+    assert migration_cost_s(make_policy("cfs"), 0) == 0.0
+
+
+def test_chaos_record_and_report(tmp_path):
+    n_nodes = 2
+    asg = _tiny(16, n_nodes)
+    res = simulate_fleet_chaos(
+        "lags", asg, FaultSchedule.single_crash(0, 1.0, n_nodes),
+        duration_s=4.0, epoch_s=1.0, exec_s=0.1,
+        record_dir=str(tmp_path),
+    )
+    txt = summarize(load_run(str(tmp_path)))
+    assert "failover:" in txt
+    assert "node_crash" in txt
+    assert f"migrations   | {len(res.migrations)}" in txt.replace("  ", " ") \
+        or str(len(res.migrations)) in txt
+
+
+# --- property: conservation + monotone completions --------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_any_schedule_conserves_functions(seed):
+    """Any random fault schedule + rebalancing keeps every function on
+    exactly one node at every epoch boundary, and cumulative completions
+    never decrease across a migration."""
+    n_nodes, total = 2, 8
+    asg = _tiny(total, n_nodes)
+    sch = FaultSchedule.random(
+        seed=seed, n_nodes=n_nodes, duration_s=4.0, n_events=3)
+    res = simulate_fleet_chaos(
+        "lags", asg, sch, duration_s=4.0, epoch_s=1.0, exec_s=0.1, seed=3)
+    for counts in res.per_epoch_counts():
+        assert sum(counts) == total  # every fn on exactly one node
+        assert all(c >= 0 for c in counts)
+    cum = res.cumulative_completions()
+    assert all(b >= a for a, b in zip(cum, cum[1:]))
+    assert res.n_arrived >= res.n_completed

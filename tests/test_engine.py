@@ -166,6 +166,69 @@ def test_lags_latency_beats_fair_bursty():
     assert p50_lags <= p50_fair * 1.05
 
 
+def test_admission_deadline_expires_queued_work():
+    """Requests never admitted within the deadline expire (counted, not
+    served late); preempted work (already started) is exempt."""
+    eng, tenants = _mk_engine(
+        "fair", n_tenants=2, n_slots=1, admission_timeout_s=0.05)
+    eng.submit(Request(0, 0, 16, 2000, 0.0))  # hogs the only slot
+    eng.step()
+    assert {r.rid for r in eng.running} == {0}
+    eng.submit(Request(1, 1, 16, 4, 0.0))  # will never be admitted in time
+    started = Request(2, 1, 16, 4, 0.0)
+    started.start_time = 0.0  # looks preempted: deadline does not apply
+    tenants[1].queue.append(started)
+    while eng.stats.time_s < 1.0:
+        eng.step()
+    assert eng.stats.expired == 1
+    assert started in list(tenants[1].queue)
+    assert all(r.rid != 1 for r in eng.stats.completed)
+
+
+def test_out_of_pages_backoff_then_completes():
+    """Out-of-pages rejection parks the request with exponential backoff
+    (no silent head-requeue); it completes once pages free up."""
+    eng, _ = _mk_engine(
+        "lags", n_tenants=2, n_slots=4, n_pages=4, page_tokens=16)
+    reqs = [
+        Request(0, 0, 48, 8, 0.0),  # 56 tokens -> all 4 pages
+        Request(1, 1, 16, 4, 0.0),  # 2 pages -> rejected while 0 runs
+    ]
+    st = eng.run(5.0, reqs)
+    assert st.backoffs >= 1
+    assert {r.rid for r in st.completed} == {0, 1}
+    done1 = next(r for r in st.completed if r.rid == 1)
+    assert done1.rejections >= 1
+    assert eng.alloc.free_pages == eng.alloc.n_pages
+
+
+def test_shed_overload_drop_sheds_highest_credit_first():
+    eng, tenants = _mk_engine("lags", n_tenants=4, n_slots=1,
+                              shed_watermark=4)
+    for i, t in tenants.items():
+        t.credit = float(i)  # tenant 3 = most-served = shed first
+    reqs = [Request(i, i % 4, 16, 4, 0.0) for i in range(12)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert eng.stats.shed == 8  # depth 12 -> watermark 4
+    assert len(tenants[3].queue) == 0  # highest credit emptied first
+    depth = sum(len(t.queue) for t in tenants.values())
+    assert depth + len(eng.running) + eng.stats.shed \
+        + len(eng.stats.completed) == 12
+
+
+def test_shed_overload_truncate_serves_everything_shorter():
+    eng, _ = _mk_engine("lags", n_tenants=2, n_slots=2,
+                        shed_watermark=2, shed_mode="truncate")
+    reqs = [Request(i, i % 2, 16, 32, 0.0) for i in range(8)]
+    st = eng.run(30.0, reqs)
+    assert st.shed > 0
+    assert len(st.completed) == 8  # truncation never drops work
+    trunc = [r for r in st.completed if r.truncated]
+    assert trunc and all(r.max_new == 16 for r in trunc)  # halved once
+
+
 def test_engine_real_model_backend():
     import jax
 
