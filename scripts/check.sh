@@ -83,4 +83,38 @@ case "$merged" in
 esac
 
 echo
+echo "== topology smoke: partition fencing + proactive drain of a trending node =="
+python - <<'PY'
+from repro.fleet import (
+    FaultEvent, FaultSchedule, Topology, place, simulate_fleet_chaos,
+)
+topo = Topology.uniform(4, 2)
+# node 2 trends degraded (below the reactive watchdog's min_ratio) while
+# node 0 briefly partitions: the drainer must evacuate node 2 early and
+# the fence must defer (not lose) node 0's arrivals
+sched = FaultSchedule(
+    [FaultEvent(1.5, "node_slow", 2, factor=1.8),
+     FaultEvent(3.0, "partition", nodes=(0,), duration=4.5)],
+    4, topo,
+)
+asg = place("rack-spread", 64, 4, exec_s=0.1, racks=topo.racks())
+res = simulate_fleet_chaos(
+    "lags", asg, sched, duration_s=12.0, epoch_s=1.5, exec_s=0.1, seed=10,
+    topology=topo, proactive_drain=True, drain_enter_ratio=1.35,
+    drain_exit_ratio=1.15,
+)
+drained = {n for e in res.epochs for n in e.draining}
+fenced = {n for e in res.epochs for n in e.fenced}
+assert 2 in drained, f"trending node never drained (drained={drained})"
+assert any(m.src == 2 for m in res.migrations), "no drain migration"
+assert fenced == {0}, f"partitioned node not fenced (fenced={fenced})"
+assert res.lost_arrivals == 0, "fenced arrivals were lost, not deferred"
+assert res.deferred_arrivals > 0 and res.replayed_arrivals >= res.deferred_arrivals
+assert all(sum(e.counts) == 64 for e in res.epochs), "conservation broken"
+print(f"topology OK: drained={sorted(drained)} fenced={sorted(fenced)} "
+      f"deferred={res.deferred_arrivals} replayed={res.replayed_arrivals} "
+      f"migrations={len(res.migrations)} done={res.done_ratio*100:.1f}%")
+PY
+
+echo
 echo "check.sh: all good"

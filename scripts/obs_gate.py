@@ -21,7 +21,10 @@ A second, fleet-level fingerprint pins the ``repro.fleet`` layer: a
 3-node density-9 sweep (324 functions placed by round-robin / pack /
 spread, policy lags) records each placement's node counts and the fleet
 completion/switch/busy totals, so placement or consolidation behavior
-cannot drift silently either.
+cannot drift silently either.  Two chaos fingerprints pin the failure
+path: a scripted 2-node crash (legacy grammar) and a 4-node/2-rack
+partition + rack-crash run whose per-epoch live/suspect/fenced/draining
+ladder, migrations and deferred/reconciled totals must stay exact.
 
 Usage (from the repo root, PYTHONPATH=src):
 
@@ -156,6 +159,55 @@ def chaos_fingerprint():
     }
 
 
+TOPO_NODES = 4
+TOPO_RACK_SIZE = 2
+TOPO_FNS = 48
+TOPO_PART_NODE = 0
+TOPO_PART_T = 1.5
+TOPO_PART_DUR = 3.0
+TOPO_CRASH_RACK = 1
+TOPO_CRASH_T = 4.5
+
+
+def chaos_topology_fingerprint():
+    """Deterministic topology-aware chaos run (behavior, not timing): a
+    4-node/2-rack fleet where node 0 partitions (SUSPECT -> fenced ->
+    healed) and rack 1 then loses both nodes.  Pins the liveness ladder —
+    per-epoch live/suspect/fenced/draining counts — plus per-epoch node
+    fn counts, migrations, completions and the deferred/reconciled
+    reconciliation totals, so detection, fencing or failover drift cannot
+    land silently."""
+    from repro.fleet import (
+        FaultEvent, FaultSchedule, Topology, place, simulate_fleet_chaos,
+    )
+
+    topo = Topology.uniform(TOPO_NODES, TOPO_RACK_SIZE)
+    sched = FaultSchedule(
+        [
+            FaultEvent(TOPO_PART_T, "partition", nodes=(TOPO_PART_NODE,),
+                       duration=TOPO_PART_DUR),
+            FaultEvent(TOPO_CRASH_T, "rack_crash", rack=TOPO_CRASH_RACK),
+        ],
+        TOPO_NODES, topo,
+    )
+    asg = place("rack-spread", TOPO_FNS, TOPO_NODES, n_cores=N_CORES,
+                exec_s=0.1, racks=topo.racks())
+    res = simulate_fleet_chaos(
+        "lags", asg, sched, duration_s=CHAOS_DUR_S, epoch_s=CHAOS_EPOCH_S,
+        n_cores=N_CORES, seed=CHAOS_SEED, exec_s=0.1, topology=topo,
+    )
+    return {
+        "per_epoch_counts": res.per_epoch_counts(),
+        "per_epoch_liveness": res.per_epoch_liveness(),
+        "migrations": len(res.migrations),
+        "completed": int(res.n_completed),
+        "deferred": int(res.deferred_arrivals),
+        "reconciled": int(res.reconciled_completions),
+        "replayed": int(res.replayed_arrivals),
+        "lost": int(res.lost_arrivals),
+    }
+
+
 def measure():
     from repro.obs import metrics
 
@@ -207,6 +259,7 @@ def main(argv=None) -> int:
     m = measure_best()
     fleet = fleet_fingerprint()
     chaos = chaos_fingerprint()
+    chaos_topo = chaos_topology_fingerprint()
     if args.update:
         with open(BASELINE, "w") as f:
             json.dump(
@@ -222,6 +275,7 @@ def main(argv=None) -> int:
                         "placements": fleet,
                     },
                     "chaos": chaos,
+                    "chaos_topology": chaos_topo,
                 },
                 f, indent=2,
             )
@@ -288,6 +342,25 @@ def main(argv=None) -> int:
         )
         return 1
 
+    base_topo = base.get("chaos_topology")
+    if base_topo is None:
+        print("obs_gate: baseline has no chaos_topology fingerprint; "
+              "re-pin with --update", file=sys.stderr)
+        return 2
+    if chaos_topo != base_topo:
+        drift = [k for k in sorted(set(chaos_topo) | set(base_topo))
+                 if chaos_topo.get(k) != base_topo.get(k)]
+        print(
+            "obs_gate: TOPOLOGY-CHAOS BEHAVIOR CHANGED — the scripted "
+            f"partition + rack-crash run no longer matches the pinned "
+            f"fingerprint (drifted: {drift})\n"
+            f"  pinned:   { {k: base_topo.get(k) for k in drift} }\n"
+            f"  measured: { {k: chaos_topo.get(k) for k in drift} }\n"
+            "If intended, re-pin with: python scripts/obs_gate.py --update",
+            file=sys.stderr,
+        )
+        return 1
+
     slack = m["ratio"] / base["ratio"] - 1.0
     budget = tol + m["noise"]
     if slack > budget:
@@ -302,7 +375,8 @@ def main(argv=None) -> int:
         f"calib={m['calib_s']*1e3:.0f}ms ratio={m['ratio']:.3f} "
         f"baseline={base['ratio']:.3f} delta={slack*100:+.1f}% "
         f"(tol {tol*100:.0f}% + noise {m['noise']*100:.1f}%) "
-        f"fleet={len(fleet)} placements OK, failover fingerprint OK"
+        f"fleet={len(fleet)} placements OK, failover fingerprint OK, "
+        f"topology-chaos fingerprint OK"
     )
     if slack > budget:
         print(

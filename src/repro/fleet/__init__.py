@@ -30,6 +30,17 @@ Chaos / failover (fault injection + mid-run rebalancing)::
                                epoch_s=5.0)
     print(res.done_ratio, res.recovery_s(), len(res.migrations))
 
+Topology-aware chaos (correlated rack failures, network faults,
+proactive drain)::
+
+    from repro.fleet import Topology, FaultSchedule, simulate_fleet_chaos
+    topo = Topology.uniform(n_nodes=10, rack_size=5)
+    sched = FaultSchedule.single_rack_crash(rack=1, t=20.0, topology=topo)
+    res = simulate_fleet_chaos("lags", asg, sched, duration_s=60.0,
+                               epoch_s=5.0, strategy="rack-spread",
+                               proactive_drain=True)
+    print(res.recovery_s(), res.reconciled, res.report())
+
 Consolidation (the Fig 7 headline)::
 
     from repro.fleet import consolidation_sweep, min_nodes_meeting_slo
@@ -69,6 +80,7 @@ from repro.fleet.rebalance import (
     simulate_fleet_chaos,
 )
 from repro.fleet.simulate import FleetResult, record_fleet, simulate_fleet
+from repro.fleet.topology import Topology
 from repro.sched.numpy_backend import make_policy
 
 __all__ = [
@@ -78,5 +90,5 @@ __all__ = [
     "cluster_result", "consolidation_sweep", "fn_shares", "make_policy",
     "migration_cost_s", "min_nodes_meeting_slo", "place",
     "placement_comparison", "record_chaos", "record_fleet", "simulate_fleet",
-    "simulate_fleet_chaos", "switch_penalty",
+    "simulate_fleet_chaos", "switch_penalty", "Topology",
 ]

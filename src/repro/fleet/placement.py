@@ -22,6 +22,13 @@ assignments:
     numpy :class:`repro.sched.numpy_backend.Policy` cost model — dense
     cgroup stacking is penalised super-linearly, and run-to-completion
     policies (LAGS) tolerate density that CFS cannot.
+  * ``rack-spread``  — least-loaded node, ties broken toward the
+    least-loaded *rack*: balances reserved share like ``spread`` while
+    steering equal-load choices across failure domains (pass the per-node
+    ``racks`` array from :meth:`repro.fleet.topology.Topology.racks`), so
+    a rack-scoped crash strands the smallest possible share and failover
+    replicas do not re-concentrate in one domain.  Without ``racks`` it
+    degrades to ``spread`` exactly (every node its own rack).
 
 Every strategy must *conserve the function count*: each global fn id is
 assigned to exactly one node (``Assignment.__post_init__`` asserts it).
@@ -149,6 +156,49 @@ def _spread(shares: np.ndarray, n_nodes: int,
         n = int(np.argmin(load))
         out[n].append(int(f))
         load[n] += shares[f]
+    return [np.asarray(sorted(g), np.int64) for g in out]
+
+
+@_register("rack-spread")
+def _rack_spread(shares: np.ndarray, n_nodes: int,
+                 racks: Optional[np.ndarray] = None,
+                 init_load: Optional[np.ndarray] = None,
+                 **_kw) -> List[np.ndarray]:
+    """Least-loaded node, least-loaded rack as tiebreak (two-level LPT
+    greedy by reserved share).
+
+    ``racks[i]`` is node ``i``'s failure domain (``Topology.racks()``, or
+    any subset of it remapped onto a destination list for mid-run
+    rebalancing).  ``init_load`` warm-starts per-node loads, and the rack
+    loads are derived from it, so failover placement sees the survivors'
+    *current* rack occupancy.  With ``racks=None`` every node is its own
+    rack and the strategy reduces to ``spread`` exactly.
+    """
+    load = (np.zeros(n_nodes) if init_load is None
+            else np.asarray(init_load, float).copy())
+    if racks is None:
+        racks = np.arange(n_nodes, dtype=np.int64)
+    else:
+        racks = np.asarray(racks, np.int64)
+        if racks.shape[0] != n_nodes:
+            raise ValueError(
+                f"racks has {racks.shape[0]} entries for {n_nodes} nodes")
+    rack_load = np.zeros(int(racks.max()) + 1)
+    np.add.at(rack_load, racks, load)
+    out: List[list] = [[] for _ in range(n_nodes)]
+    for f in np.argsort(-shares, kind="stable"):
+        s = float(shares[f])
+        # primary key: the node's own load; secondary: its rack load; ties
+        # broken by node index (lexsort is stable).  Node load must lead:
+        # were rack load primary, a rack left with a single live node
+        # (e.g. its sibling just drained) would have the smallest rack
+        # load and swallow an entire failover wave onto that one node —
+        # rack diversity is the tiebreak among equally loaded nodes, not
+        # an excuse to overload one.
+        n = int(np.lexsort((rack_load[racks], load))[0])
+        out[n].append(int(f))
+        load[n] += s
+        rack_load[racks[n]] += s
     return [np.asarray(sorted(g), np.int64) for g in out]
 
 

@@ -58,6 +58,32 @@ A run with an **empty schedule and no epoch override is bit-identical to
 :func:`simulate_fleet`** (it delegates — the differential test in
 ``tests/test_chaos.py`` pins this), so the chaos layer costs nothing when
 unused.
+
+**Topology-aware failure handling.**  With a
+:class:`~repro.fleet.topology.Topology` the schedule can crash whole
+racks and inject *network* faults — partitions, delayed and lossy
+heartbeats — that today's crash detector would misread as node death.
+The controller therefore models the heartbeat network explicitly (an
+in-flight queue with per-node delay and seeded loss; a delivered
+heartbeat is evidence of the node at its *send* time, not its arrival
+time) and feeds a second evidence channel,
+``HealthTracker.observe_progress``, from completions it can see in the
+epoch results.  Detection becomes a ladder: a node whose heartbeats are
+overdue but whose work keeps landing is **SUSPECT** and gets *fenced* —
+its nominal arrivals are deferred into the retry backlog (replayed on
+heal: reconciliation), it serves only its in-flight carryover, and it is
+excluded as a migration destination — while only heartbeat-silent,
+progress-stale nodes are CONFIRMED-DEAD and failed over.  Fencing never
+re-places, so the conservation invariant (every fn on exactly one node)
+holds even when the controller's liveness view is wrong.  With
+``proactive_drain=True`` a :class:`~repro.distributed.fault.TrendDetector`
+watches each node's per-request service time against the healthy-fleet
+mean and migrates load off nodes *trending* degraded before the
+watchdog would quarantine them — hysteresis (enter/exit ratio band +
+persistence) guarantees the drain decision never flaps.  When a victim
+is failed over under a topology, destinations avoid the failing rack(s)
+when any other rack has capacity, and the ``rack-spread`` strategy keeps
+the re-placed share balanced across the surviving domains.
 """
 from __future__ import annotations
 
@@ -69,7 +95,11 @@ import numpy as np
 
 from repro.core.switch_cost import switch_cost_us
 from repro.core.traces import make_workload
-from repro.distributed.fault import HealthTracker, StragglerWatchdog
+from repro.distributed.fault import (
+    HealthTracker,
+    StragglerWatchdog,
+    TrendDetector,
+)
 from repro.fleet.chaos import FLEET, FaultSchedule, NodeState
 from repro.fleet.placement import (
     PLACEMENTS,
@@ -77,6 +107,7 @@ from repro.fleet.placement import (
     _DensityProbe,
 )
 from repro.fleet.simulate import FleetResult, simulate_fleet
+from repro.fleet.topology import Topology
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.obs.schedstats import SchedStats
@@ -88,6 +119,12 @@ from repro.sched.numpy_backend import Policy, make_policy
 MIGRATION_COLD_MULT = 400.0
 
 _EPOCH_SEED_STRIDE = 104729  # decorrelates per-epoch band workloads
+
+#: heartbeat sends per control epoch — cadence finer than the control
+#: interval so a sub-epoch delivery delay shifts staleness by the actual
+#: delay rather than quantizing it up to a full epoch (which would trip
+#: the suspect timeout for arbitrarily small delays)
+HB_PER_EPOCH = 3
 
 
 def migration_cost_s(
@@ -152,6 +189,12 @@ class EpochRecord:
     migrations: int = 0
     migration_s: float = 0.0
     degraded: bool = False
+    # topology-aware liveness ladder (all empty on plain crash runs)
+    suspects: List[int] = field(default_factory=list)  # detected at t1
+    fenced: List[int] = field(default_factory=list)  # fenced *during* epoch
+    draining: List[int] = field(default_factory=list)  # trend-drained nodes
+    deferred: int = 0  # arrivals deferred off fenced nodes (in lost_arrivals)
+    reconciled: int = 0  # completions that landed on fenced nodes
 
 
 class ChaosFleetResult:
@@ -164,7 +207,8 @@ class ChaosFleetResult:
                  schedule: FaultSchedule, epochs: List[EpochRecord],
                  migrations: List[Migration], duration_s: float,
                  epoch_s: float, n_cores: int, n_nodes: int,
-                 rebalanced: bool, slo_s: float = 1.0):
+                 rebalanced: bool, slo_s: float = 1.0,
+                 proactive: bool = False):
         self.policy = policy
         self.placement = placement
         self.schedule = schedule
@@ -176,6 +220,7 @@ class ChaosFleetResult:
         self.n_nodes = n_nodes
         self.rebalanced = rebalanced
         self.slo_s = slo_s
+        self.proactive = proactive
 
     # -- FleetResult-compatible queries ------------------------------------
     @property
@@ -220,6 +265,19 @@ class ChaosFleetResult:
         return sum(e.credited for e in self.epochs)
 
     @property
+    def deferred_arrivals(self) -> int:
+        """Arrivals deferred off fenced (SUSPECT) nodes into the backlog
+        — a subset of ``stranded_arrivals``; replayed on heal."""
+        return sum(e.deferred for e in self.epochs)
+
+    @property
+    def reconciled_completions(self) -> int:
+        """Completions that landed on fenced nodes — work the controller
+        could not route to but still observed and credits (reconciliation
+        of a partitioned-but-alive node's progress)."""
+        return sum(e.reconciled for e in self.epochs)
+
+    @property
     def n_arrived(self) -> int:
         """Served arrivals plus the backlog still stranded at run end —
         an unrecovered outage is demand the fleet failed to see.  Carried
@@ -250,26 +308,59 @@ class ChaosFleetResult:
     def per_epoch_counts(self) -> List[List[int]]:
         return [list(e.counts) for e in self.epochs]
 
+    def per_epoch_liveness(self) -> List[Dict[str, int]]:
+        """Controller-view liveness ladder per epoch: ground-truth live
+        nodes, and how many the controller held as suspect / fenced /
+        draining — the trajectory the topology fingerprint pins."""
+        return [
+            {
+                "live": int(sum(e.alive)),
+                "suspect": len(e.suspects),
+                "fenced": len(e.fenced),
+                "draining": len(e.draining),
+            }
+            for e in self.epochs
+        ]
+
     # -- failover metrics --------------------------------------------------
+    def _crashed_nodes(self) -> List[Tuple[int, float]]:
+        """(node, crash time) for every node a ``node_crash`` or expanded
+        ``rack_crash`` event takes down."""
+        out: List[Tuple[int, float]] = []
+        topo = self.schedule.topology
+        for ev in self.schedule.events:
+            if ev.kind == "node_crash":
+                out.append((ev.node, ev.t))
+            elif ev.kind == "rack_crash" and topo is not None:
+                out.extend((n, ev.t) for n in topo.nodes_in(ev.rack))
+        return out
+
     def recovery_s(self) -> Dict[int, Optional[float]]:
-        """Per crashed node: seconds from the crash event until every
-        function it held was being served on a live node again (``None``
-        = never recovered within the run)."""
+        """Per crashed node (including nodes taken down by a rack-scoped
+        crash): seconds from the crash event until every function it held
+        was being served on a live node again (``None`` = never recovered
+        within the run)."""
         out: Dict[int, Optional[float]] = {}
-        crashes = [ev for ev in self.schedule.events
-                   if ev.kind == "node_crash"]
-        for ev in crashes:
-            out[ev.node] = None
+        for node, ct in self._crashed_nodes():
+            out[node] = None
             for e in self.epochs:
-                if e.t1 <= ev.t:
+                if e.t1 <= ct:
                     continue
                 # recovered in the first epoch where node holds no
                 # functions while dead (all re-placed), or is alive again
-                held = e.counts[ev.node]
-                if (held == 0 and not e.alive[ev.node]) or e.alive[ev.node]:
-                    out[ev.node] = max(e.t0 - ev.t, 0.0)
+                held = e.counts[node]
+                if (held == 0 and not e.alive[node]) or e.alive[node]:
+                    out[node] = max(e.t0 - ct, 0.0)
                     break
         return out
+
+    def max_recovery_s(self) -> Optional[float]:
+        """Worst-case per-node recovery, ``None`` when any crashed node
+        never recovered (or no node crashed at all)."""
+        rec = self.recovery_s()
+        if not rec or any(v is None for v in rec.values()):
+            return None
+        return max(rec.values())
 
     def degraded_slo_attainment(self, slo_s: Optional[float] = None) -> float:
         """Inside degraded windows (epochs with an active fault or
@@ -306,6 +397,10 @@ class ChaosFleetResult:
             "rebalanced": self.rebalanced,
             "crashes": sum(1 for ev in self.schedule.events
                            if ev.kind == "node_crash"),
+            "rack_crashes": sum(1 for ev in self.schedule.events
+                                if ev.kind == "rack_crash"),
+            "partitions": sum(1 for ev in self.schedule.events
+                              if ev.kind == "partition"),
             "migrations": len(self.migrations),
             "migration_s": round(self.migration_s, 6),
             "stranded_arrivals": self.stranded_arrivals,
@@ -313,6 +408,8 @@ class ChaosFleetResult:
             "carried_arrivals": self.carried_arrivals,
             "credited_arrivals": self.credited_arrivals,
             "lost_arrivals": self.lost_arrivals,
+            "deferred_arrivals": self.deferred_arrivals,
+            "reconciled": self.reconciled_completions,
             "completed": self.n_completed,
             "arrived": self.n_arrived,
             "done_ratio": round(self.done_ratio, 6),
@@ -320,7 +417,15 @@ class ChaosFleetResult:
             "degraded_slo_attainment": self.degraded_slo_attainment(),
             "stragglers_drained": sorted(
                 {s for e in self.epochs for s in e.stragglers}),
+            "suspect_nodes": sorted(
+                {s for e in self.epochs for s in e.suspects}),
+            "fenced_nodes": sorted(
+                {s for e in self.epochs for s in e.fenced}),
+            "drained_nodes": sorted(
+                {s for e in self.epochs for s in e.draining}),
+            "proactive_drain": self.proactive,
             "per_epoch_counts": self.per_epoch_counts(),
+            "per_epoch_liveness": self.per_epoch_liveness(),
         }
 
 
@@ -368,9 +473,12 @@ def _replace_victims(
     epoch: int,
     depth: float = 5.0,
     cold_mult: float = MIGRATION_COLD_MULT,
+    racks: Optional[np.ndarray] = None,
 ) -> Tuple[Assignment, List[Migration]]:
     """Re-place every function held by ``victims`` onto ``dests`` via the
-    placement registry, warm-started with the survivors' current load."""
+    placement registry, warm-started with the survivors' current load.
+    ``racks`` (per-node, global index space) gives rack-aware strategies
+    their failure domains, remapped onto the destination list."""
     victim_fns = np.concatenate(
         [np.asarray(asg.node_fns[v], np.int64) for v in victims])
     src_of = {int(f): v for v in victims for f in asg.node_fns[v]}
@@ -381,6 +489,7 @@ def _replace_victims(
     local = strat(
         asg.shares[victim_fns], len(dests), policy=policy, n_cores=n_cores,
         init_load=init_load, init_groups=init_groups,
+        racks=None if racks is None else np.asarray(racks, np.int64)[dests],
     )
     node_fns = [np.asarray(f, np.int64) for f in asg.node_fns]
     for v in victims:
@@ -423,6 +532,11 @@ def simulate_fleet_chaos(
     slo_s: float = 1.0,
     carry_unfinished: bool = True,
     record_dir: Optional[str] = None,
+    topology: Optional[Topology] = None,
+    proactive_drain: bool = False,
+    drain_enter_ratio: float = 1.6,
+    drain_exit_ratio: float = 1.2,
+    drain_persist: int = 2,
 ) -> ChaosFleetResult:
     """Run a placed fleet under a fault schedule; see the module docstring.
 
@@ -441,12 +555,24 @@ def simulate_fleet_chaos(
     offered load (see the module docstring).  Disable it to get
     memoryless epochs, e.g. to observe one epoch's nominal demand in
     isolation.
+
+    ``topology`` (defaults to ``schedule.topology``) enables rack-scoped
+    events and rack-avoiding failover; ``proactive_drain`` turns on the
+    :class:`TrendDetector` drain loop with hysteresis knobs
+    ``drain_enter_ratio`` / ``drain_exit_ratio`` / ``drain_persist`` (see
+    the module docstring for the suspect/fenced/drain semantics).
     """
     if schedule.n_nodes != assignment.n_nodes:
         raise ValueError(
             f"schedule is for {schedule.n_nodes} nodes, assignment has "
             f"{assignment.n_nodes}")
     n_nodes = assignment.n_nodes
+    if topology is None:
+        topology = schedule.topology
+    if topology is not None and topology.n_nodes != n_nodes:
+        raise ValueError(
+            f"topology covers {topology.n_nodes} nodes, assignment has "
+            f"{n_nodes}")
 
     if not schedule and epoch_s is None:
         fleet = simulate_fleet(
@@ -485,8 +611,12 @@ def simulate_fleet_chaos(
         tracker.register(i, now=0.0)
     watchdog = StragglerWatchdog(
         n_nodes, warmup=watchdog_warmup, k_sigma=watchdog_k_sigma)
+    trend = TrendDetector(
+        n_nodes, enter_ratio=drain_enter_ratio, exit_ratio=drain_exit_ratio,
+        persist=drain_persist)
     state = NodeState(n_nodes)
     quarantined: set = set()  # drained stragglers stay out of rotation
+    fenced: set = set()  # SUSPECT nodes: alive by evidence, unreachable
     asg = assignment
     epochs: List[EpochRecord] = []
     migrations: List[Migration] = []
@@ -498,6 +628,15 @@ def simulate_fleet_chaos(
     # per-function carryover: admitted-but-unfinished arrivals from the
     # previous epoch, re-offered wherever the function lives next
     carry = np.zeros(len(assignment.shares), np.int64)
+    # the heartbeat network: in-flight heartbeats as (arrive_t, node,
+    # sent_t) — a delivered heartbeat proves the node was alive at *send*
+    # time, so ``hb_delay`` makes a live node's evidence stale (SUSPECT)
+    # without faking freshness.  The loss RNG is only ever drawn for nodes
+    # under an active ``heartbeat_loss`` event, so fault-free and
+    # crash-only runs consume no randomness (bit-compat with the pinned
+    # failover fingerprint).
+    hb_pending: List[Tuple[float, int, float]] = []
+    hb_rng = np.random.default_rng(np.random.SeedSequence([seed, 0x4Bb]))
 
     t0 = 0.0
     epoch = 0
@@ -508,7 +647,7 @@ def simulate_fleet_chaos(
 
         # 1. inject: events in [t0, t1) fire at epoch start
         for ev in schedule.events_in(t0, t1):
-            state.apply(ev)
+            state.apply(ev, topology)
             obs_metrics.counter(f"chaos.{ev.kind}").inc()
             if tracing:
                 obs_tracing.tracer().emit(
@@ -529,11 +668,31 @@ def simulate_fleet_chaos(
         node_extra = []
         replayed_e = 0
         carried_e = 0
+        deferred_e = 0
+        fenced_e = sorted(fenced)  # the fence applied to *this* epoch
         for i in range(n_nodes):
             fns = asg.node_fns[i]
             base = global_rates[fns] * float(state.storm)
             ext = None
-            if state.alive[i] and len(fns):
+            if state.alive[i] and i in fenced and len(fns):
+                # fenced (SUSPECT): no new arrivals are routed — the
+                # nominal demand is deferred into the retry backlog and
+                # replayed when the node heals (or its functions fail
+                # over), while the in-flight carryover it already
+                # admitted still completes on the node.  Its parked
+                # backlog stays parked: replaying it into an unreachable
+                # node would lose the replay.
+                counts = _count_arrivals(
+                    base, fns, eps, n_cores, seed_e, exec_s, arr_cache)
+                backlog[fns] += counts
+                deferred_e += int(counts.sum())
+                cr = carry[fns]
+                if cr.any():
+                    carried_e += int(cr.sum())
+                    ext = cr
+                    carry[fns] = 0
+                base = np.zeros_like(base)
+            elif state.alive[i] and len(fns):
                 bl = backlog[fns]
                 cr = carry[fns]
                 if bl.any() or cr.any():
@@ -548,6 +707,8 @@ def simulate_fleet_chaos(
             obs_metrics.counter("chaos.replayed_arrivals").inc(replayed_e)
         if carried_e:
             obs_metrics.counter("chaos.carried_arrivals").inc(carried_e)
+        if deferred_e:
+            obs_metrics.counter("chaos.deferred_arrivals").inc(deferred_e)
         fleet_e = simulate_fleet(
             policy_name, asg, duration_s=eps, n_cores=n_cores, seed=seed_e,
             exec_s=exec_s, backend=backend, distinct_seeds=distinct_seeds,
@@ -613,43 +774,137 @@ def simulate_fleet_chaos(
         if credited_e:
             obs_metrics.counter("chaos.credited_arrivals").inc(credited_e)
 
-        # heartbeats + per-epoch schedstats into the detection stack
+        # evidence + detection: observed completions are progress evidence
+        # (they land in shared results, so they survive partitions) and
+        # heartbeats ride the modelled network — sent a few times per
+        # epoch (real heartbeat cadence is finer than the control
+        # interval; with a single send at the epoch end, any sub-epoch
+        # delivery delay would quantize up to a full epoch of staleness
+        # and trip the detector) unless the node is partitioned at send
+        # time or the seeded loss drops them, delivered once their delay
+        # elapses, and timestamped at *send* time (a late heartbeat
+        # proves the node was alive when it sent, not now — that
+        # staleness is exactly what makes it SUSPECT).  Routed-work notes
+        # tell the tracker which silences it may hold against a host:
+        # fenced nodes get nothing routed, so their progress silence is
+        # the controller's own doing and must not escalate to failure.
+        reconciled_e = 0
         stragglers: List[int] = []
+        hb_times = [t0 + eps * k / HB_PER_EPOCH
+                    for k in range(1, HB_PER_EPOCH + 1)]
+        part_at = [state.partitioned(ts) for ts in hb_times]
+        for i in range(n_nodes):
+            if i not in fenced and len(asg.node_fns[i]):
+                tracker.note_routed(i, now=t1)
         for i in range(n_nodes):
             if not state.alive[i]:
                 continue
-            tracker.heartbeat(i, now=t1)
-            svc = _node_service_time(fleet_e.nodes[i])
+            r = fleet_e.nodes[i]
+            if r.n_completed > 0:
+                tracker.observe_progress(i, now=t1)
+                if i in fenced:
+                    reconciled_e += int(r.n_completed)
+            for ts, part in zip(hb_times, part_at):
+                if part[i]:
+                    continue
+                p_loss = float(state.hb_loss[i])
+                if p_loss <= 0.0 or hb_rng.random() >= p_loss:
+                    hb_pending.append(
+                        (ts + float(state.hb_delay[i]), i, ts))
+            svc = _node_service_time(r)
             if svc is not None and watchdog.observe(i, svc):
                 if i not in quarantined:
                     stragglers.append(i)
+        if reconciled_e:
+            obs_metrics.counter("chaos.reconciled").inc(reconciled_e)
+        still_pending: List[Tuple[float, int, float]] = []
+        for arrive_t, node, sent_t in hb_pending:
+            if arrive_t <= t1 + 1e-9:
+                # never let an older in-flight heartbeat regress the
+                # freshness a newer (faster) one already established
+                if tracker.last_seen.get(node, -1e18) < sent_t:
+                    tracker.heartbeat(node, now=sent_t)
+            else:
+                still_pending.append((arrive_t, node, sent_t))
+        hb_pending = still_pending
         detected_dead = tracker.failed_hosts(now=t1)
+        suspects = tracker.suspect_hosts(now=t1)
+
+        # proactive drain: trend-detect nodes drifting away from the
+        # healthy-fleet service time and migrate their load *before* the
+        # watchdog quarantines them.  Idle nodes (no completions — e.g.
+        # already fully drained) are observed through a synthetic probe
+        # at the node's slowdown multiplier, the sim stand-in for a real
+        # drainer's probe requests — without it a drained node could
+        # never demonstrate recovery and the hysteresis could not exit.
+        draining_now: List[int] = []
+        if proactive_drain:
+            for i in range(n_nodes):
+                if not state.alive[i]:
+                    trend.forget(i)
+                    continue
+                if i in quarantined:
+                    continue
+                svc = _node_service_time(fleet_e.nodes[i])
+                if svc is None:
+                    svc = exec_s * float(state.slow[i])
+                trend.observe(i, svc)
+            draining_now = [i for i in trend.drain_hosts()
+                            if i not in quarantined]
 
         degraded = bool(
-            lost or replayed_e or detected_dead or stragglers or quarantined
+            lost or deferred_e or replayed_e or detected_dead or suspects
+            or fenced_e or draining_now or stragglers or quarantined
             or (~state.alive).any() or (state.slow > 1.0).any()
             or state.storm > 1.0
         )
         rec = EpochRecord(
             epoch, t0, t1, fleet_e, asg.counts.tolist(),
-            state.alive.tolist(), list(detected_dead), stragglers, lost,
+            state.alive.tolist(), list(detected_dead), stragglers,
+            lost + deferred_e,
             replayed=replayed_e, carried=carried_e, credited=credited_e,
-            degraded=degraded,
+            degraded=degraded, suspects=list(suspects), fenced=fenced_e,
+            draining=draining_now, deferred=deferred_e,
+            reconciled=reconciled_e,
         )
+        # the fence follows the *latest* suspicion verdict: newly suspect
+        # nodes stop receiving work next epoch, healed nodes (heartbeats
+        # flowing again) are unfenced and their deferred backlog replays
+        fenced = set(suspects)
 
-        # 3./4. re-place the victims' functions and charge the migrations
+        # 3./4. re-place the victims' functions and charge the migrations.
+        # Fenced nodes are neither victims nor destinations: their work is
+        # not failed over (that would double-place a probably-alive node's
+        # functions) and no new load lands on them.  Trend-drained nodes
+        # *are* victims — their load migrates early at the priced cost —
+        # but unlike quarantine the drain is reversible: once the trend
+        # detector's hysteresis exits, the node rejoins the destinations.
         if rebalance:
             quarantined |= set(stragglers)
+            unavailable = set(detected_dead) | quarantined
+            drain_set = set(draining_now)
             victims = sorted(
-                v for v in set(detected_dead) | quarantined
+                v for v in (unavailable | drain_set) - fenced
                 if len(asg.node_fns[v])
             )
             dests = [d for d in range(n_nodes)
-                     if d not in set(detected_dead) | quarantined]
+                     if d not in unavailable | drain_set | fenced]
+            if topology is not None and dests:
+                # steer failover traffic out of failing racks: a rack with
+                # a confirmed-dead member is suspect as a domain (shared
+                # power/ToR), so prefer destinations elsewhere — a soft
+                # constraint, waived when every surviving node shares a
+                # failing rack
+                bad_racks = {topology.rack_of(v) for v in detected_dead}
+                safe = [d for d in dests
+                        if topology.rack_of(d) not in bad_racks]
+                if safe:
+                    dests = safe
             if victims and dests:
                 asg, moved = _replace_victims(
                     asg, victims, dests, reb_name, policy, n_cores, epoch,
                     cold_mult=migration_cold_mult,
+                    racks=None if topology is None else topology.racks(),
                 )
                 migrations.extend(moved)
                 rec.migrations = len(moved)
@@ -674,7 +929,7 @@ def simulate_fleet_chaos(
     res = ChaosFleetResult(
         policy_name, assignment.placement, schedule, epochs, migrations,
         duration_s, epoch_s, n_cores, n_nodes, rebalanced=rebalance,
-        slo_s=slo_s,
+        slo_s=slo_s, proactive=proactive_drain,
     )
     if record_dir:
         record_chaos(res, record_dir)

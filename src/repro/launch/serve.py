@@ -103,7 +103,20 @@ def main(argv=None):
                     choices=("drop", "truncate"),
                     help="shed by dropping newest requests or by halving "
                          "their max_new once")
+    ap.add_argument("--fence-window", action="append", default=[],
+                    metavar="T0:T1",
+                    help="fence the engine (serve in-flight only, defer new "
+                         "admissions) over [T0, T1) sim-seconds; repeatable, "
+                         "models a SUSPECT verdict from the health tracker")
     args = ap.parse_args(argv)
+
+    fence_windows = []
+    for w in args.fence_window:
+        try:
+            a, b = w.split(":")
+            fence_windows.append((float(a), float(b)))
+        except ValueError:
+            ap.error(f"--fence-window expects T0:T1, got {w!r}")
 
     if args.obs_dir or args.trace:
         obs.enable()
@@ -144,6 +157,8 @@ def main(argv=None):
             "shed_watermark": args.shed_watermark,
             "shed_mode": args.shed_mode,
         }
+    if fence_windows:
+        meta["fence_windows"] = [[a, b] for a, b in fence_windows]
     if args.shard:
         meta["shard"] = args.shard
 
@@ -165,6 +180,7 @@ def main(argv=None):
         args.duration, arrivals,
         checkpoint_every_s=args.checkpoint_every if args.obs_dir else 0.0,
         on_checkpoint=_checkpoint if args.obs_dir else None,
+        fence_windows=fence_windows or None,
     )
     lat = np.asarray([r.latency for r in st.completed])
     print(
@@ -175,6 +191,8 @@ def main(argv=None):
         f"membership_changes={st.membership_changes}"
         + (f" shed={st.shed} expired={st.expired} backoffs={st.backoffs}"
            if (st.shed or st.expired or st.backoffs) else "")
+        + (f" fenced_steps={st.fenced_steps} deferred={st.deferred}"
+           if (st.fenced_steps or st.deferred) else "")
         + (f" checkpoints={n_ckpt}" if n_ckpt else "")
     )
     if args.obs_dir:

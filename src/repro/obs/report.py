@@ -53,6 +53,7 @@ def _key_rows(sched: SchedStats) -> List[tuple]:
         ("time_s", sched.time_s, "s"),
         ("useful_s", sched.useful_s, "s"),
         ("switch_s", sched.switch_s, "s"),
+        ("fenced_s", sched.fenced_s, "s"),
         ("switch_share", sched.switch_share, "%"),
         ("switches", sched.switches, ""),
         ("switch_rate_hz", sched.switch_rate(), ""),
@@ -67,14 +68,43 @@ def _key_rows(sched: SchedStats) -> List[tuple]:
     ]
 
 
+def _fault_node(e: dict) -> str:
+    """Render a fault event's scope: a node, a rack, a node set or fleet."""
+    if e.get("rack", -1) >= 0:
+        return f"rack{e['rack']}"
+    nodes = e.get("nodes") or []
+    if nodes:
+        return ",".join(str(n) for n in nodes)
+    return "fleet" if e.get("node", -1) < 0 else str(e.get("node"))
+
+
 def _failover_section(ch: dict) -> List[str]:
     """Render a chaos/failover report (attached by
     ``repro.fleet.record_chaos``): what was injected, what moved, how fast
-    the fleet recovered, and SLO attainment inside degraded windows."""
+    the fleet recovered, and SLO attainment inside degraded windows.
+
+    A fault-free chaos record (empty schedule) renders ``∅`` for every
+    fault-derived metric instead of degenerate zeros — 0 migrations after
+    an injected crash and 0 migrations because nothing was injected are
+    different facts, and recovery/SLO math over no faults is meaningless.
+    """
     evs = ch.get("events", [])
+    if not evs:
+        rows = [
+            ["injected events", "∅ (fault-free run)"],
+            ["epochs",
+             f"{ch.get('epochs')} x {_fmt(ch.get('epoch_s'), 's')}"],
+            ["migrations", "∅"],
+            ["stranded/replayed", "∅"],
+            ["recovery", "∅"],
+            ["degraded_slo_attainment", "∅"],
+            ["completed/arrived",
+             f"{ch.get('completed')}/{ch.get('arrived')} "
+             f"({_fmt(ch.get('done_ratio'), '%')})"],
+        ]
+        return ["", "failover: ∅", _table(["metric", "value"], rows)]
     erows = [
-        [_fmt(e.get("t"), "s"), str(e.get("kind")),
-         "fleet" if e.get("node", -1) < 0 else str(e.get("node")),
+        [_fmt(e.get("t"), "s"), str(e.get("kind")), _fault_node(e),
          _fmt(e.get("factor"))]
         for e in evs
     ]
@@ -82,7 +112,7 @@ def _failover_section(ch: dict) -> List[str]:
     rec_txt = ", ".join(
         f"node{n}={'never' if v is None else _fmt(v, 's')}"
         for n, v in sorted(rec.items())
-    ) or "-"
+    ) or "∅ (no node crashed)"
     rows = [
         ["epochs", f"{ch.get('epochs')} x {_fmt(ch.get('epoch_s'), 's')}"],
         ["rebalanced", str(ch.get("rebalanced"))],
@@ -102,14 +132,36 @@ def _failover_section(ch: dict) -> List[str]:
     if drained:
         rows.append(["stragglers_drained",
                      ", ".join(str(s) for s in drained)])
+    # topology-aware liveness ladder: only rendered when the run exercised
+    # it (suspects seen, arrivals deferred off fenced nodes, or the
+    # proactive drainer touched a node)
+    suspects = ch.get("suspect_nodes") or []
+    if suspects:
+        rows.append(["suspect_nodes",
+                     ", ".join(str(s) for s in suspects)])
+    fenced = ch.get("fenced_nodes") or []
+    if fenced:
+        rows.append(["fenced_nodes", ", ".join(str(s) for s in fenced)])
+        rows.append(["deferred/reconciled",
+                     f"{ch.get('deferred_arrivals', 0)}"
+                     f"/{ch.get('reconciled', 0)}"])
+    pro_drained = ch.get("drained_nodes") or []
+    if ch.get("proactive_drain"):
+        rows.append(["proactive_drained",
+                     ", ".join(str(s) for s in pro_drained) or "∅"])
     out = ["", "failover:", _table(["metric", "value"], rows)]
-    if erows:
-        out += ["", "injected events:",
-                _table(["t", "kind", "node", "factor"], erows)]
+    out += ["", "injected events:",
+            _table(["t", "kind", "node", "factor"], erows)]
     counts = ch.get("per_epoch_counts") or []
     if counts:
         out += ["", "per-epoch node fn counts:"]
         out += [f"  epoch {i}: {c}" for i, c in enumerate(counts)]
+    live = ch.get("per_epoch_liveness") or []
+    if live and (suspects or fenced or pro_drained):
+        out += ["", "per-epoch liveness (live/suspect/fenced/draining):"]
+        out += [f"  epoch {i}: {lv['live']}/{lv['suspect']}"
+                f"/{lv['fenced']}/{lv['draining']}"
+                for i, lv in enumerate(live)]
     return out
 
 

@@ -69,6 +69,11 @@ class SchedStats:
         self.switch_s = 0.0
         self.switches = 0.0
         self.capacity_s = 0.0  # core-seconds offered (0 if 1-slot semantics)
+        # seconds spent fenced (SUSPECT): serving in-flight work only, no
+        # new admissions.  An annotation parallel to the conservation
+        # identity, not a term in it — fenced time is still accounted as
+        # useful/switch/idle by whatever ran during it.
+        self.fenced_s = 0.0
         self.switch_cost_us = Histogram("switch_cost_us", lo=1e-3)
         self.run_delay = Histogram("run_delay_s")
         self.latency = Histogram("latency_s")
@@ -104,6 +109,10 @@ class SchedStats:
             e.same_group_switches += n
         if n > 0:
             self.switch_cost_us.record(1e6 * cost_s / n, weight=n)
+
+    def account_fenced(self, s: float) -> None:
+        """Accumulate wall time spent fenced (no-new-admissions mode)."""
+        self.fenced_s += s
 
     def account_run_delay(self, entity: int, s: float) -> None:
         e = self._ent(entity)
@@ -172,6 +181,7 @@ class SchedStats:
         self.switch_s += other.switch_s
         self.switches += other.switches
         self.capacity_s += other.capacity_s
+        self.fenced_s += other.fenced_s
         self.switch_cost_us.merge(other.switch_cost_us)
         self.run_delay.merge(other.run_delay)
         self.latency.merge(other.latency)
@@ -206,6 +216,7 @@ class SchedStats:
             "switch_s": self.switch_s,
             "switches": self.switches,
             "capacity_s": self.capacity_s,
+            "fenced_s": self.fenced_s,
             "switch_share": self.switch_share,
             "mean_switch_cost_us": self.mean_switch_cost_us,
             "switch_cost_us": self.switch_cost_us.to_dict(),
@@ -224,6 +235,7 @@ class SchedStats:
         st.switch_s = d["switch_s"]
         st.switches = d["switches"]
         st.capacity_s = d.get("capacity_s", 0.0)
+        st.fenced_s = d.get("fenced_s", 0.0)  # absent in pre-fence records
         st.switch_cost_us = Histogram.from_dict(
             d["switch_cost_us"], "switch_cost_us")
         st.run_delay = Histogram.from_dict(d["run_delay"], "run_delay_s")

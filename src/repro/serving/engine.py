@@ -92,6 +92,15 @@ class EngineStats:
         self.shed = 0
         self.expired = 0
         self.backoffs = 0
+        # fencing counters (``engine.fenced_steps`` / ``engine.deferred``):
+        # steps taken while fenced, and requests that arrived during a
+        # fence — queued for later, not admitted (reconciled on unfence)
+        self.fenced_steps = 0
+        self.deferred = 0
+
+    @property
+    def fenced_s(self) -> float:
+        return self.sched.fenced_s
 
     @property
     def useful_s(self) -> float:
@@ -120,7 +129,39 @@ class Engine:
         self._prev_members: set = set()
         self._resident: List[int] = []  # LRU order, most recent last
         self._parked: List[Request] = []  # backing off after page rejection
+        self._fenced = False
         self._model = None
+
+    # -- fencing ----------------------------------------------------------
+    # The serving-side half of the controller's SUSPECT tier: while a node
+    # is suspected (heartbeats overdue, progress still observed) no new
+    # work is admitted, in-flight requests run to completion, and arrivals
+    # queue up to reconcile once the fence lifts — the engine is *drained
+    # of admissions*, not killed, so nothing is double-placed elsewhere.
+    def fence(self):
+        if not self._fenced:
+            self._fenced = True
+            obs_metrics.counter("engine.fence").inc()
+            if obs_tracing.active():
+                obs_tracing.tracer().emit(
+                    "engine.fence", "engine", self.stats.time_s * 1e6, 0.0,
+                    {"queued": sum(len(t.queue)
+                                   for t in self.tenants.values())}, ph="i")
+
+    def unfence(self):
+        if self._fenced:
+            self._fenced = False
+            obs_metrics.counter("engine.unfence").inc()
+            if obs_tracing.active():
+                obs_tracing.tracer().emit(
+                    "engine.unfence", "engine", self.stats.time_s * 1e6,
+                    0.0,
+                    {"queued": sum(len(t.queue)
+                                   for t in self.tenants.values())}, ph="i")
+
+    @property
+    def fenced(self) -> bool:
+        return self._fenced
 
     # -- optional real-model backend ------------------------------------
     def attach_model(self, model_cfg, params, max_len: int = 256):
@@ -145,6 +186,11 @@ class Engine:
     def submit(self, req: Request):
         self.tenants[req.tenant].queue.append(req)
         self.stats.sched.account_arrival(req.tenant)
+        if self._fenced:
+            # arrivals during a fence are deferred, not dropped: they sit
+            # in their tenant queue and reconcile once the fence lifts
+            self.stats.deferred += 1
+            obs_metrics.counter("engine.deferred").inc()
 
     # -- one engine step --------------------------------------------------
     def step(self):
@@ -165,32 +211,42 @@ class Engine:
 
         # graceful degradation: return parked requests whose backoff
         # expired, expire requests past their admission deadline, shed
-        # overload beyond the queue-depth watermark
-        if self._parked:
-            self._unpark()
-        if cfg.admission_timeout_s > 0:
-            self._expire_queued()
-        if cfg.shed_watermark > 0:
-            self._shed_overload()
+        # overload beyond the queue-depth watermark.  A fenced engine does
+        # none of it: parked/queued work is deferred inventory that must
+        # survive the fence to reconcile afterwards, and admission is
+        # closed anyway.
+        if not self._fenced:
+            if self._parked:
+                self._unpark()
+            if cfg.admission_timeout_s > 0:
+                self._expire_queued()
+            if cfg.shed_watermark > 0:
+                self._shed_overload()
 
-        # LAGS global path: lighter waiting tenant may evict a heavy one
+        # LAGS global path: lighter waiting tenant may evict a heavy one.
+        # Fenced: no preemption (suspending a request would strand it
+        # behind the closed admission door) and no admissions — in-flight
+        # requests run to completion on the remaining steps.
         running_tids = {r.tenant for r in self.running}
-        preempt, victim = should_preempt(
-            cfg.policy, self.tenants, running_tids, cfg.preempt_hysteresis
-        )
-        if preempt and len(self.running) >= cfg.n_slots:
-            # suspend one running request of the victim tenant: pages and
-            # prefill state are KEPT (the Linux analogue: a preempted thread
-            # resumes where it stopped; only the slot is yielded)
-            for i, r in enumerate(self.running):
-                if r.tenant == victim:
-                    self.tenants[victim].queue.appendleft(r)
-                    del self.running[i]
-                    break
+        if not self._fenced:
+            preempt, victim = should_preempt(
+                cfg.policy, self.tenants, running_tids,
+                cfg.preempt_hysteresis
+            )
+            if preempt and len(self.running) >= cfg.n_slots:
+                # suspend one running request of the victim tenant: pages
+                # and prefill state are KEPT (the Linux analogue: a
+                # preempted thread resumes where it stopped; only the slot
+                # is yielded)
+                for i, r in enumerate(self.running):
+                    if r.tenant == victim:
+                        self.tenants[victim].queue.appendleft(r)
+                        del self.running[i]
+                        break
 
         # admit into free slots (page-limited)
         free = cfg.n_slots - len(self.running)
-        admitted = pick_admissions(
+        admitted = [] if self._fenced else pick_admissions(
             cfg.policy, self.tenants, free, running_tids
         )
         prefill_toks = 0
@@ -232,6 +288,10 @@ class Engine:
             st.sched.account_time(cfg.base_step_s)
             st.sched.account_idle(cfg.base_step_s)
             st.steps += 1
+            if self._fenced:
+                st.fenced_steps += 1
+                st.sched.account_fenced(cfg.base_step_s)
+                obs_metrics.counter("engine.fenced_steps").inc()
             return
 
         # engine context switch: batch membership changed.  Weight swaps hit
@@ -286,6 +346,10 @@ class Engine:
         st.time_s += step_s
         st.sched.account_time(step_s)
         st.steps += 1
+        if self._fenced:
+            st.fenced_steps += 1
+            st.sched.account_fenced(step_s)
+            obs_metrics.counter("engine.fenced_steps").inc()
         if obs_tracing.active():
             # trace on the sim clock: one complete event per engine step
             obs_tracing.tracer().emit(
@@ -477,15 +541,26 @@ class Engine:
         self._cache_len += 1
 
     def run(self, until_s: float, arrivals: Optional[List[Request]] = None,
-            checkpoint_every_s: float = 0.0, on_checkpoint=None):
+            checkpoint_every_s: float = 0.0, on_checkpoint=None,
+            fence_windows: Optional[List] = None):
         """Drive the engine until ``until_s`` sim-seconds, feeding arrivals.
 
         ``on_checkpoint(stats)`` fires every ``checkpoint_every_s``
         sim-seconds (when both are given) so a live run can stream
         schedstats snapshots — e.g. periodic ``record_run`` checkpoints a
         ``repro.obs.report`` invocation can watch while the run is going.
+
+        ``fence_windows`` is a list of ``(t0, t1)`` sim-second intervals
+        during which the engine is fenced (suspected by its controller):
+        no admissions, in-flight work completes, arrivals defer — the
+        single-engine rehearsal of the fleet controller's SUSPECT tier.
         """
         arrivals = sorted(arrivals or [], key=lambda r: r.arrival)
+        windows = sorted(
+            (float(a), float(b)) for a, b in (fence_windows or []))
+        for a, b in windows:
+            if b <= a:
+                raise ValueError(f"empty fence window [{a}, {b})")
         ai = 0
         next_ckpt = (
             checkpoint_every_s
@@ -493,6 +568,13 @@ class Engine:
             else float("inf")
         )
         while self.stats.time_s < until_s:
+            now = self.stats.time_s
+            if windows:
+                in_fence = any(a <= now < b for a, b in windows)
+                if in_fence and not self._fenced:
+                    self.fence()
+                elif not in_fence and self._fenced:
+                    self.unfence()
             while ai < len(arrivals) and arrivals[ai].arrival <= self.stats.time_s:
                 self.submit(arrivals[ai])
                 ai += 1
@@ -501,4 +583,6 @@ class Engine:
                 on_checkpoint(self.stats)
                 while next_ckpt <= self.stats.time_s:
                     next_ckpt += checkpoint_every_s
+        if windows and self._fenced:
+            self.unfence()
         return self.stats

@@ -1,0 +1,425 @@
+"""Topology-aware chaos: failure domains, network faults, the SUSPECT
+tier, fencing, and proactive drain.
+
+Covers the detection ladder (healthy -> SUSPECT -> failed) under delayed
+heartbeats, the trend-detector hysteresis, the ``rack-spread`` placement,
+the extended ``FaultSchedule`` grammar (validation + byte-exact JSON
+round-trips, property-tested), the fencing semantics of the chaos
+controller (defer, reconcile, conserve), and the serving engine's fence
+windows.  Scenarios stay tiny; the full-scale sweep lives in
+``benchmarks/fig_chaos_topology.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.fault import HealthTracker, TrendDetector
+from repro.fleet import (
+    FaultEvent,
+    FaultSchedule,
+    Topology,
+    place,
+    simulate_fleet_chaos,
+)
+from repro.obs.report import _failover_section
+from repro.scheduler.tenant import Request, Tenant
+from repro.serving.engine import Engine, EngineConfig
+
+
+# --- topology ----------------------------------------------------------------
+
+
+def test_topology_uniform_and_queries():
+    topo = Topology.uniform(10, rack_size=5)
+    assert topo.n_nodes == 10 and topo.n_racks == 2
+    assert topo.rack_of(0) == 0 and topo.rack_of(9) == 1
+    assert list(topo.nodes_in(1)) == [5, 6, 7, 8, 9]
+    assert topo.racks().tolist() == [0] * 5 + [1] * 5
+    with pytest.raises(ValueError):
+        topo.nodes_in(2)
+
+
+def test_topology_flat_every_node_its_own_rack():
+    topo = Topology.flat(4)
+    assert topo.n_racks == 4
+    assert [topo.rack_of(n) for n in range(4)] == [0, 1, 2, 3]
+
+
+def test_topology_rejects_gappy_or_empty_racks():
+    with pytest.raises(ValueError):
+        Topology(rack_of_node=(0, 2))  # rack 1 missing
+    with pytest.raises(ValueError):
+        Topology(rack_of_node=())
+
+
+def test_topology_json_round_trip_byte_exact():
+    topo = Topology.uniform(6, rack_size=2, zone_racks=3)
+    text = topo.to_json()
+    back = Topology.from_json(text)
+    assert back == topo
+    assert back.to_json() == text
+
+
+# --- HealthTracker: the SUSPECT tier ----------------------------------------
+
+
+def test_delayed_heartbeats_with_progress_is_suspect_not_failed():
+    """The crash/partition conflation fix: silence on the heartbeat
+    channel plus *observed progress* must never be declared a failure."""
+    tr = HealthTracker(n_hosts=2, timeout_s=5.0)
+    for h in (0, 1):
+        tr.heartbeat(h, now=0.0)
+    tr.heartbeat(1, now=9.0)
+    tr.observe_progress(0, now=9.0)  # its work keeps landing
+    assert tr.failed_hosts(now=10.0) == []
+    assert tr.suspect_hosts(now=10.0) == [0]
+
+
+def test_suspect_becomes_failed_once_progress_goes_stale_too():
+    tr = HealthTracker(n_hosts=1, timeout_s=5.0)
+    tr.heartbeat(0, now=0.0)
+    tr.observe_progress(0, now=4.0)
+    assert tr.suspect_hosts(now=8.0) == [0]  # progress still fresh
+    assert tr.failed_hosts(now=8.0) == []
+    assert tr.failed_hosts(now=10.0) == [0]  # both channels stale
+    assert tr.suspect_hosts(now=10.0) == []
+
+
+def test_never_progressed_host_keeps_heartbeat_only_timing():
+    """Hosts that never produced progress evidence fall back to the
+    legacy heartbeat-only verdict — plain crash detection timing must
+    not change just because the SUSPECT tier exists."""
+    tr = HealthTracker(n_hosts=1, timeout_s=5.0)
+    tr.heartbeat(0, now=0.0)
+    assert tr.failed_hosts(now=5.5) == [0]
+    assert tr.suspect_hosts(now=5.5) == []
+
+
+def test_progress_timeout_s_overrides_staleness_horizon():
+    tr = HealthTracker(n_hosts=1, timeout_s=2.0, progress_timeout_s=10.0)
+    tr.heartbeat(0, now=0.0)
+    tr.observe_progress(0, now=0.0)
+    # hb long overdue at t=5, but progress is judged on the longer horizon
+    assert tr.suspect_hosts(now=5.0) == [0]
+    assert tr.failed_hosts(now=11.0) == [0]
+
+
+# --- TrendDetector: hysteresis ----------------------------------------------
+
+
+def _feed(td, host, value, others=(1, 2, 3), baseline=1.0):
+    for o in others:
+        td.observe(o, baseline)
+    return td.observe(host, value)
+
+
+def test_trend_detector_debounces_single_burst():
+    td = TrendDetector(n_hosts=4, alpha=1.0, enter_ratio=1.5, persist=2)
+    _feed(td, 0, 1.0)
+    _feed(td, 0, 1.0)  # past warmup
+    assert _feed(td, 0, 2.0) is False  # first breach: streak 1 only
+    assert _feed(td, 0, 1.0) is False  # burst over, streak resets
+    assert _feed(td, 0, 2.0) is False
+    assert _feed(td, 0, 2.0) is True  # persisted: drains
+    assert td.drain_hosts() == [0]
+
+
+def test_trend_detector_hysteresis_band_never_flaps():
+    td = TrendDetector(n_hosts=4, alpha=1.0, enter_ratio=1.5,
+                       exit_ratio=1.2, persist=1)
+    _feed(td, 0, 1.0)
+    _feed(td, 0, 1.0)
+    assert _feed(td, 0, 1.6) is True  # enters above 1.5
+    # oscillating inside the [1.2, 1.5] dead zone: stays draining
+    for v in (1.4, 1.25, 1.45, 1.3):
+        assert _feed(td, 0, v) is True
+    assert _feed(td, 0, 1.0) is False  # recovered below exit
+    # and oscillating in the band from below never re-enters either
+    for v in (1.3, 1.45, 1.35):
+        assert _feed(td, 0, v) is False
+
+
+def test_trend_detector_forget_drops_history():
+    td = TrendDetector(n_hosts=4, alpha=1.0, enter_ratio=1.5, persist=1)
+    _feed(td, 0, 1.0)
+    _feed(td, 0, 1.0)
+    assert _feed(td, 0, 3.0) is True
+    td.forget(0)
+    assert td.drain_hosts() == []
+    assert 0 not in td.ewma
+
+
+def test_trend_detector_rejects_inverted_band():
+    with pytest.raises(ValueError):
+        TrendDetector(n_hosts=2, enter_ratio=1.2, exit_ratio=1.5)
+
+
+# --- schedule grammar: validation -------------------------------------------
+
+
+def _topo4():
+    return Topology.uniform(4, 2)
+
+
+def test_rack_crash_requires_topology_and_valid_rack():
+    with pytest.raises(ValueError, match="topology"):
+        FaultSchedule([FaultEvent(1.0, "rack_crash", rack=0)], 4)
+    with pytest.raises(ValueError, match="out of range"):
+        FaultSchedule([FaultEvent(1.0, "rack_crash", rack=2)], 4, _topo4())
+
+
+def test_overlapping_partitions_of_same_node_rejected():
+    evs = [
+        FaultEvent(1.0, "partition", nodes=(0, 1), duration=4.0),
+        FaultEvent(3.0, "partition", nodes=(1, 2), duration=2.0),
+    ]
+    with pytest.raises(ValueError, match="overlapping partitions"):
+        FaultSchedule(evs, 4)
+    # disjoint windows of the same node are fine
+    FaultSchedule(
+        [FaultEvent(1.0, "partition", nodes=(0,), duration=1.0),
+         FaultEvent(3.0, "partition", nodes=(0,), duration=1.0)], 4)
+
+
+def test_heartbeat_fault_on_crashed_node_rejected():
+    evs = [
+        FaultEvent(1.0, "node_crash", 2),
+        FaultEvent(2.0, "heartbeat_delay", 2, factor=3.0),
+    ]
+    with pytest.raises(ValueError):
+        FaultSchedule(evs, 4)
+    with pytest.raises(ValueError):
+        FaultSchedule(
+            [FaultEvent(1.0, "rack_crash", rack=1),
+             FaultEvent(2.0, "heartbeat_loss", 3, factor=0.5)],
+            4, _topo4())
+
+
+def test_partition_validation_edges():
+    with pytest.raises(ValueError, match="non-empty"):
+        FaultSchedule([FaultEvent(1.0, "partition", duration=1.0)], 4)
+    with pytest.raises(ValueError, match="duplicates"):
+        FaultSchedule(
+            [FaultEvent(1.0, "partition", nodes=(1, 1), duration=1.0)], 4)
+    with pytest.raises(ValueError, match="out of range"):
+        FaultSchedule(
+            [FaultEvent(1.0, "partition", nodes=(4,), duration=1.0)], 4)
+    with pytest.raises(ValueError, match="duration"):
+        FaultSchedule(
+            [FaultEvent(1.0, "partition", nodes=(0,), duration=0.0)], 4)
+
+
+# --- schedule grammar: byte-exact JSON round-trips (property) ----------------
+
+
+def test_all_event_kinds_round_trip_byte_exact():
+    topo = _topo4()
+    sched = FaultSchedule(
+        [
+            FaultEvent(0.5, "heartbeat_delay", 0, factor=2.5),
+            FaultEvent(1.0, "heartbeat_loss", 1, factor=0.3),
+            FaultEvent(1.5, "partition", nodes=(0, 1), duration=2.0),
+            FaultEvent(2.0, "node_slow", 2, factor=3.0),
+            FaultEvent(2.5, "burst_storm", factor=2.0),
+            FaultEvent(3.0, "recover"),
+            FaultEvent(3.5, "rack_crash", rack=1),
+            FaultEvent(4.0, "node_crash", 0),
+        ],
+        4, topo,
+    )
+    text = sched.to_json()
+    back = FaultSchedule.from_json(text)
+    assert back.to_json() == text
+    assert back.events == sched.events
+    assert back.topology == topo
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=2, max_value=8))
+def test_any_random_topology_schedule_round_trips_byte_exact(seed, n_events):
+    topo = Topology.uniform(6, 2)
+    sched = FaultSchedule.random(seed=seed, n_nodes=6, duration_s=30.0,
+                                 n_events=n_events, topology=topo)
+    text = sched.to_json()
+    back = FaultSchedule.from_json(text)
+    assert back.to_json() == text
+    assert back.events == sched.events
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_without_topology_keeps_legacy_bytes(seed):
+    """``random(topology=None)`` must stay byte-identical to the
+    pre-topology grammar (fig_failover's seeded schedules are pinned)."""
+    a = FaultSchedule.random(seed=seed, n_nodes=4, duration_s=20.0)
+    b = FaultSchedule.random(seed=seed, n_nodes=4, duration_s=20.0,
+                             topology=None)
+    assert a.to_json() == b.to_json()
+    for ev in a.events:
+        assert ev.kind in ("node_crash", "node_slow", "burst_storm",
+                           "recover")
+
+
+# --- placement: rack-spread --------------------------------------------------
+
+
+def test_rack_spread_reduces_to_spread_without_racks():
+    a = place("spread", 40, 4, exec_s=0.1)
+    b = place("rack-spread", 40, 4, exec_s=0.1)
+    assert all(np.array_equal(x, y)
+               for x, y in zip(a.node_fns, b.node_fns))
+
+
+def test_rack_spread_balances_nodes_and_diversifies_racks():
+    topo = Topology.uniform(4, 2)
+    asg = place("rack-spread", 40, 4, exec_s=0.1, racks=topo.racks())
+    assert sorted(asg.counts.tolist()) == [10, 10, 10, 10]
+    with pytest.raises(ValueError, match="racks"):
+        place("rack-spread", 40, 4, exec_s=0.1, racks=np.array([0, 1]))
+
+
+def test_rack_spread_does_not_dogpile_a_lone_surviving_node():
+    """With rack loads primary a rack reduced to one destination would
+    swallow an entire failover wave; node load must lead."""
+    from repro.fleet.placement import PLACEMENTS, fn_shares
+
+    shares = fn_shares(30, exec_s=0.1)
+    racks = np.array([0, 0, 1])  # rack 1 has a single live node
+    init = np.array([1.0, 1.0, 1.0])
+    groups = PLACEMENTS["rack-spread"](shares, 3, racks=racks,
+                                       init_load=init)
+    counts = [len(g) for g in groups]
+    assert max(counts) - min(counts) <= 1
+
+
+# --- controller integration ---------------------------------------------
+
+
+def _run(schedule, topo, total=64, n_nodes=4, **kw):
+    asg = place("rack-spread", total, n_nodes, exec_s=0.1,
+                racks=topo.racks())
+    kw.setdefault("duration_s", 12.0)
+    kw.setdefault("epoch_s", 1.5)
+    return simulate_fleet_chaos("lags", asg, schedule, exec_s=0.1, seed=10,
+                                topology=topo, **kw)
+
+
+def test_rack_crash_fails_over_every_member_and_avoids_the_rack():
+    topo = _topo4()
+    res = _run(FaultSchedule.single_rack_crash(1, 3.0, topo), topo)
+    assert all(m.src in (2, 3) and m.dst in (0, 1) for m in res.migrations)
+    rec = res.recovery_s()
+    assert set(rec) == {2, 3}
+    assert all(v is not None for v in rec.values())
+    assert res.per_epoch_counts()[-1][2:] == [0, 0]
+    assert all(sum(e.counts) == 64 for e in res.epochs)
+
+
+def test_partition_fences_instead_of_double_placing():
+    topo = _topo4()
+    res = _run(
+        FaultSchedule.single_partition((1,), 3.0, 4.5, 4, topo), topo)
+    assert res.migrations == []  # never failed over: no double-placement
+    fenced = {n for e in res.epochs for n in e.fenced}
+    assert fenced == {1}
+    assert res.lost_arrivals == 0
+    assert res.replayed_arrivals >= res.deferred_arrivals > 0
+    assert all(sum(e.counts) == 64 for e in res.epochs)
+    # healed: the tail of the run has no suspects and no fence
+    assert res.epochs[-1].suspects == [] and res.epochs[-1].fenced == []
+
+
+def test_mild_heartbeat_delay_causes_no_false_positives():
+    """Delay below the detection timeout must be completely invisible:
+    no suspects, no fence, no migrations."""
+    topo = _topo4()
+    sched = FaultSchedule(
+        [FaultEvent(1.5, "heartbeat_delay", 1, factor=0.5)], 4, topo)
+    res = _run(sched, topo)
+    assert res.migrations == []
+    assert all(e.suspects == [] and e.fenced == [] for e in res.epochs)
+    assert res.lost_arrivals == 0 and res.deferred_arrivals == 0
+
+
+def test_proactive_drain_evacuates_trending_node_with_hysteresis():
+    topo = _topo4()
+    sched = FaultSchedule(
+        [FaultEvent(1.5, "node_slow", 2, factor=1.8)], 4, topo)
+    res = _run(sched, topo, proactive_drain=True,
+               drain_enter_ratio=1.35, drain_exit_ratio=1.15)
+    drained = {n for e in res.epochs for n in e.draining}
+    assert drained == {2}
+    moves = [m for m in res.migrations if m.src == 2]
+    assert moves and all(m.dst != 2 for m in moves)
+    assert all(m.cost_s >= 0.0 for m in moves)
+    # reactive run under the same schedule only moves once the straggler
+    # watchdog quarantines — strictly later than the proactive drain
+    rea = _run(sched, topo, proactive_drain=False)
+    pro_first = min(m.epoch for m in moves)
+    if rea.migrations:
+        assert pro_first < min(m.epoch for m in rea.migrations)
+    else:
+        assert pro_first >= 0
+
+
+def test_proactive_drain_is_reversible_after_recover():
+    topo = _topo4()
+    sched = FaultSchedule(
+        [FaultEvent(1.5, "node_slow", 2, factor=1.8),
+         FaultEvent(7.5, "recover", 2)], 4, topo)
+    res = _run(sched, topo, duration_s=18.0, proactive_drain=True,
+               drain_enter_ratio=1.35, drain_exit_ratio=1.15)
+    assert any(2 in e.draining for e in res.epochs)
+    assert 2 not in res.epochs[-1].draining  # hysteresis exited post-heal
+
+
+# --- serving engine: fence windows -------------------------------------------
+
+
+def _mk_engine(policy="lags", n_tenants=8, **cfg):
+    tenants = {i: Tenant(i, weight_mb=32.0) for i in range(n_tenants)}
+    return Engine(EngineConfig(policy=policy, **cfg), tenants)
+
+
+def test_engine_fence_window_defers_but_completes_in_flight():
+    reqs = [Request(i, i % 8, 128, 8, arrival=0.002 * i) for i in range(64)]
+    eng = _mk_engine()
+    st = eng.run(30.0, reqs, fence_windows=[(0.05, 0.4)])
+    assert st.fenced_steps > 0
+    assert st.deferred > 0  # arrivals inside the window were not admitted
+    assert st.sched.fenced_s > 0.0
+    assert len(st.completed) == 64  # ...but everything completes post-heal
+    assert st.sched.conservation_error() < 1e-6
+    assert not eng.fenced  # unfenced after the run
+
+
+def test_engine_fence_window_rejects_empty_window():
+    eng = _mk_engine()
+    with pytest.raises(ValueError):
+        eng.run(1.0, [], fence_windows=[(0.5, 0.5)])
+
+
+# --- report: the failover section --------------------------------------------
+
+
+def test_report_renders_empty_set_for_fault_free_chaos_record():
+    txt = "\n".join(_failover_section({
+        "events": [], "epochs": 4, "epoch_s": 1.5,
+        "completed": 40, "arrived": 40, "done_ratio": 1.0,
+    }))
+    assert "∅" in txt
+    assert "recovery" in txt and "never" not in txt
+    # no degenerate zeros presented as measurements
+    assert "migrations          0" not in txt
+
+
+def test_report_renders_liveness_ladder_for_partition_record():
+    topo = _topo4()
+    res = _run(
+        FaultSchedule.single_partition((1,), 3.0, 4.5, 4, topo), topo)
+    txt = "\n".join(_failover_section(res.report()))
+    assert "fenced_nodes" in txt and "deferred/reconciled" in txt
+    assert "per-epoch liveness" in txt
